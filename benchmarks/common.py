@@ -1,0 +1,95 @@
+"""Shared harness for the paper's host-layer benchmarks (§5.1).
+
+Methodology mirrors the paper: N threads run a fixed op mix (searches /
+inserts / removes at 1:1 insert:remove so the structure size stays constant)
+against a pre-filled structure for a fixed duration; we report throughput
+and the algorithm counters the paper reasons with (warnings, restarts,
+recycling phases, barriers).
+
+CPython/GIL note (DESIGN.md §2): this box has ONE core, so absolute scaling
+curves are not reproducible — the *counters* and method-to-method ratios
+are, and they carry the paper's claims.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+from repro.core import (
+    LRMalloc, ReleaseStrategy, RECLAIMERS, OA,
+    HarrisMichaelList, MichaelHashTable,
+)
+
+
+def build_structure(kind: str, method: str, nodes: int, *,
+                    strategy=ReleaseStrategy.MADVISE, limbo=64):
+    universe = nodes * 2
+    sb = 64 * 1024
+    need_bytes = (nodes * 4 + int(nodes / 0.75) + 4096) * 16
+    nsb = max(64, (2 * need_bytes) // sb)
+    alloc = LRMalloc(num_superblocks=int(nsb), superblock_size=sb, strategy=strategy)
+    if method == "OA":
+        # the paper's OA: a FIXED pool sized to the workload, built with
+        # regular malloc before the benchmark; recycling phases trigger when
+        # the ready pool drains
+        rec = OA(alloc, limbo_threshold=limbo,
+                 pool_size=nodes + 8 * limbo + 2048)
+    else:
+        rec = RECLAIMERS[method](alloc, limbo_threshold=limbo)
+    if kind == "list":
+        ds = HarrisMichaelList(rec)
+    else:
+        ds = MichaelHashTable(rec, max(16, int(nodes / 0.75)))
+    ctx = rec.thread_ctx()
+    rnd = random.Random(12345)
+    inserted = 0
+    while inserted < nodes:
+        if ds.insert(rnd.randrange(1, universe), ctx):
+            inserted += 1
+    return alloc, rec, ds, universe
+
+
+def run_mix(ds, rec, universe: int, *, threads: int, duration: float,
+            search_pct: float, seed: int = 7):
+    """Returns (ops_per_second, stats_dict)."""
+    stop = threading.Event()
+    counts = [0] * threads
+    errors: list = []
+
+    def worker(tid: int):
+        try:
+            ctx = rec.thread_ctx()
+            rnd = random.Random(seed * 1000003 + tid)
+            n = 0
+            # resolve hot methods once
+            ins, dele, cont = ds.insert, ds.delete, ds.contains
+            mod = (1.0 - search_pct) / 2.0
+            while not stop.is_set():
+                for _ in range(64):
+                    r = rnd.random()
+                    k = rnd.randrange(1, universe)
+                    if r < search_pct:
+                        cont(k, ctx)
+                    elif r < search_pct + mod:
+                        ins(k, ctx)
+                    else:
+                        dele(k, ctx)
+                n += 64
+            counts[tid] = n
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(threads)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in ts:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return sum(counts) / dt, rec.stats.snapshot()

@@ -1,0 +1,41 @@
+"""Paper Figs. 5 & 6: Michael hash tables (10K and 1M keys, load 0.75).
+
+The paper's claim: original OA loses scalability at higher throughput (its
+fixed shared pool forces frequent recycling phases = global synchronization)
+while the allocator-backed OA-BIT/OA-VER keep synchronization in thread
+caches + private limbo lists.  The warning-mechanism difference (BIT vs VER)
+is negligible here — chains are short, restarts are cheap.
+"""
+
+from __future__ import annotations
+
+from .common import build_structure, run_mix
+
+METHODS = ("NR", "OA", "OA-BIT", "OA-VER")
+
+
+def run(quick: bool = True):
+    sizes = ((10_000, "ht10k"), (200_000, "ht1m_scaled")) if quick else \
+            ((10_000, "ht10k"), (1_000_000, "ht1m"))
+    threads_list = (1, 2, 4) if quick else (1, 2, 4, 8, 16, 32)
+    duration = 0.3 if quick else 1.0
+    rows = []
+    for nodes, sizename in sizes:
+        for search_pct, mixname in ((0.0, "50i50r"), (0.5, "50s25i25r")):
+            for method in METHODS:
+                for nthreads in threads_list:
+                    alloc, rec, ds, universe = build_structure(
+                        "hash", method, nodes)
+                    ops, stats = run_mix(ds, rec, universe, threads=nthreads,
+                                         duration=duration,
+                                         search_pct=search_pct)
+                    rows.append({
+                        "bench": f"{sizename}_{mixname}", "method": method,
+                        "threads": nthreads, "ops_per_s": ops,
+                        "us_per_call": 1e6 / max(ops, 1e-9),
+                        **{k: stats[k] for k in (
+                            "warnings_fired", "reader_restarts",
+                            "recycling_phases", "nodes_freed")},
+                    })
+                    alloc.close()
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 4: Harris-Michael linked lists, OA vs OA-BIT vs OA-VER vs NR.
+
+Two mixes: 50i/50r (write-only) and 50s/25i/25r.  The paper's headline
+claim here: OA-VER ≥ OA-BIT on write-heavy lists because piggy-backed
+warnings fire less often ⇒ fewer traversal restarts (long chains make each
+restart expensive).  We verify the throughput ordering AND the counters.
+"""
+
+from __future__ import annotations
+
+from .common import build_structure, run_mix
+
+METHODS = ("NR", "OA", "OA-BIT", "OA-VER")
+
+
+def run(quick: bool = True):
+    nodes = 500 if quick else 5000  # paper: 5K (scaled for 1-core CPython)
+    threads_list = (1, 2, 4) if quick else (1, 2, 4, 8, 16, 32)
+    duration = 0.3 if quick else 1.0
+    rows = []
+    for search_pct, mixname in ((0.0, "50i50r"), (0.5, "50s25i25r")):
+        for method in METHODS:
+            for nthreads in threads_list:
+                alloc, rec, ds, universe = build_structure("list", method, nodes)
+                ops, stats = run_mix(ds, rec, universe, threads=nthreads,
+                                     duration=duration, search_pct=search_pct)
+                rows.append({
+                    "bench": f"list5k_{mixname}", "method": method,
+                    "threads": nthreads, "ops_per_s": ops,
+                    "us_per_call": 1e6 / max(ops, 1e-9),
+                    **{k: stats[k] for k in ("warnings_fired", "reader_restarts",
+                                             "recycling_phases", "nodes_freed")},
+                })
+                alloc.close()
+    return rows

@@ -1,0 +1,66 @@
+"""Device-adaptation microbenchmarks: paged pool ops + paged attention.
+
+Times the jnp oracle path on CPU (the Pallas kernel is TPU-target; its
+interpret-mode execution is a correctness harness, not a timing one) and
+the pool's alloc/free/validate primitives, which are the serving-engine
+hot path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pagepool as pp
+from repro.kernels.ops import paged_attention
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    P_, page, Hkv, D, Hq, B = 256, 16, 2, 64, 8, 8
+    kv = {"k": jax.random.normal(rng, (P_, page, Hkv, D), jnp.float32),
+          "v": jax.random.normal(rng, (P_, page, Hkv, D), jnp.float32)}
+    q = jax.random.normal(rng, (B, Hq, D), jnp.float32)
+    bt = jnp.tile(jnp.arange(16, dtype=jnp.int32)[None], (B, 1))
+    ln = jnp.full((B,), 16 * page, jnp.int32)
+
+    f = jax.jit(lambda q, k, v: paged_attention(q, {"k": k, "v": v}, bt, ln, impl="ref"))
+    us = _time(f, q, kv["k"], kv["v"])
+    rows.append({"bench": "paged_attention_ref", "method": f"B{B}_S{16*page}",
+                 "us_per_call": round(us, 1)})
+
+    # alloc/free are donating (in-place) ops: time them by threading the pool
+    pool = pp.pool_init(4096)
+
+    def alloc_free(pool):
+        pool, pg, _ = pp.alloc_pages(pool, 64)
+        return pp.free_pages(pool, pg)
+
+    pool = alloc_free(pool)  # compile
+    t0 = time.perf_counter()
+    reps = 50
+    for _ in range(reps):
+        pool = alloc_free(pool)
+    jax.block_until_ready(pool.free_top)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    rows.append({"bench": "pool_alloc_free_64", "method": "jit",
+                 "us_per_call": round(us, 1)})
+
+    pool, pages, _ = pp.alloc_pages(pool, 64)
+    snap = pp.snapshot_versions(pool, pages)
+    us = _time(lambda: pp.validate_read(pool, pages, snap))
+    rows.append({"bench": "pool_validate_64pages", "method": "jit",
+                 "us_per_call": round(us, 1)})
+    return rows

@@ -1,0 +1,92 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="full node counts / thread counts (slow)")
+    args = ap.parse_args()
+    quick = not args.paper_scale
+
+    from . import hash_table, linked_list, memory_release, paged_attention_bench
+
+    all_rows = []
+    for mod, label in (
+        (linked_list, "fig4_linked_list"),
+        (hash_table, "fig5_fig6_hash_table"),
+        (memory_release, "fig3_memory_release"),
+        (paged_attention_bench, "device_paged_attention"),
+    ):
+        print(f"# {label}", flush=True)
+        rows = mod.run(quick=quick)
+        all_rows.extend(rows)
+        for r in rows:
+            name = f"{r['bench']}/{r['method']}" + (
+                f"/t{r['threads']}" if "threads" in r else "")
+            us = r.get("us_per_call", "")
+            derived = {k: v for k, v in r.items()
+                       if k not in ("bench", "method", "threads", "us_per_call")}
+            print(f"{name},{us},{json.dumps(derived, default=float)}", flush=True)
+
+    # ---- paper-claim checks (the reproduction's acceptance tests) -----------
+    import collections
+    by = collections.defaultdict(dict)
+    for r in all_rows:
+        if "threads" in r:
+            by[(r["bench"], r["threads"])][r["method"]] = r
+
+    checks = []
+    for (bench, t), methods in by.items():
+        if bench.startswith("list5k_50i50r") and {"OA-BIT", "OA-VER"} <= methods.keys():
+            checks.append((
+                f"{bench}/t{t}: OA-VER fires <= warnings of OA-BIT",
+                methods["OA-VER"]["warnings_fired"] <= methods["OA-BIT"]["warnings_fired"],
+            ))
+        if bench.startswith("ht") and "OA" in methods and "OA-VER" in methods:
+            checks.append((
+                f"{bench}/t{t}: allocator-backed OA avoids recycling phases",
+                methods["OA-VER"]["recycling_phases"] == 0,
+            ))
+        if bench.startswith("ht10k_50i50r") and "OA" in methods:
+            checks.append((
+                f"{bench}/t{t}: pooled OA pays recycling phases",
+                methods["OA"]["recycling_phases"] > 0,
+            ))
+    print("# paper-claim checks")
+    ok = True
+    for name, passed in checks:
+        print(f"check,{name},{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+    dw = {r["method"]: r for r in all_rows if r["bench"] == "dwcas_on_reclaimed"}
+    if {"madvise", "shared_remap"} <= dw.keys():
+        passed = (dw["madvise"]["leaked_kib"] > 100
+                  and dw["shared_remap"]["leaked_kib"] < 64)
+        print(f"check,dwcas leak: madvise leaks ({dw['madvise']['leaked_kib']}KiB) "
+              f"but shared_remap does not ({dw['shared_remap']['leaked_kib']}KiB),"
+              f"{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+
+    mr = [r for r in all_rows if r["bench"] == "memory_release"]
+    for r in mr:
+        # every released persistent superblock (64 KiB) must actually leave
+        # the resident set under madvise/shared_remap — and must NOT under keep
+        expect_kib = r["superblocks_released"] * 64
+        freed_kib = r["peak_kib"] - r["after_reclaim_kib"]
+        if r["method"] in ("madvise", "shared_remap"):
+            passed = freed_kib >= 0.9 * expect_kib and expect_kib > 0
+        else:  # keep
+            passed = freed_kib <= 0.1 * max(expect_kib, 1)
+        print(f"check,memory_release/{r['method']} freed {freed_kib}KiB of "
+              f"{expect_kib}KiB released superblocks,{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

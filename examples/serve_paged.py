@@ -1,0 +1,15 @@
+"""Serving example: batched requests through the paged engine under memory
+pressure — preemptions and version-validated restarts happen live.
+
+Run: PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--requests", "12", "--num-pages", "12",
+                "--page-size", "8", "--max-batch", "4", "--prompt-len", "10",
+                "--max-new", "20"]
+    main()

@@ -1,0 +1,28 @@
+"""End-to-end training example: a ~20M-param LM for a few hundred steps with
+checkpointing and an injected mid-run failure (the restart is automatic).
+
+On a real pod, drop --reduced and pass --arch qwen2-72b etc.; the sharding
+rules, data sharding, checkpointing and restart logic are the same code.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import repro.launch.train as T
+from repro.configs import get_config
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ns = ap.parse_args()
+    args = argparse.Namespace(
+        arch="olmo-1b", reduced=True, steps=ns.steps, batch=4, seq=128,
+        lr=3e-3, seed=0, log_every=25, ckpt_dir=ns.ckpt_dir, ckpt_every=100,
+        fail_at_step=ns.steps // 2, grad_compression="bf16", data_source="ramp",
+    )
+    out = T.train(args)
+    assert out["final_loss"] < out["history"][0]["loss"], "loss must decrease"
+    print("train_lm OK — loss decreased through an injected failure+restart")

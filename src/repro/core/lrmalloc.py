@@ -1,0 +1,344 @@
+"""LRMalloc (Leite & Rocha 2019) extended with ``palloc`` — paper §2.3 + §3.
+
+Three components, exactly as the paper describes:
+
+- **thread caches** — one stack per (size class, persistent-flag) per thread;
+  a malloc is a pop, a free is a push; fills/flushes hit the heap.
+- **heap** — manages *superblocks* (large arena blocks carved into same-size
+  blocks) through *descriptors* that are never reclaimed, only recycled.
+- **pagemap** — maps any block offset to its superblock's descriptor.
+
+The paper's extension: ``palloc()`` allocates from superblocks flagged
+*persistent*.  A persistent superblock that becomes empty is NOT released to
+the OS; instead the configured `vm.ReleaseStrategy` drops its physical frames
+while keeping the range readable, and its descriptor — which still owns the
+virtual range — goes to a second recycling pool that is preferred when a new
+superblock is needed (that is how virtual address space is recycled, §3.2).
+
+Superblock states and transitions follow Fig. 2:
+FULL -> PARTIAL -> {FULL, EMPTY}; persistent EMPTY superblocks re-enter
+circulation through the mapped-descriptor pool rather than being unmapped.
+
+The anchor CAS protocol mirrors LRMalloc: a descriptor's ``anchor`` packs
+(state, avail, count, tag) and every state transition is a single CAS; block
+free lists are threaded *through the block memory itself*.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+from .atomic import AtomicRef
+from .sizeclass import MAX_SZ, NUM_CLASSES, class_block_size, size_to_class
+from .vm import Arena, LargeAllocation, ReleaseStrategy
+
+# Anchor states (paper Fig. 2)
+FULL, PARTIAL, EMPTY = 0, 1, 2
+
+_STATE_NAMES = {FULL: "full", PARTIAL: "partial", EMPTY: "empty"}
+
+
+@dataclass
+class Anchor:
+    state: int
+    avail: int  # offset of first free block (0 = none)
+    count: int  # number of free blocks
+    tag: int  # ABA tag
+
+    def as_tuple(self):
+        return (self.state, self.avail, self.count, self.tag)
+
+
+class Descriptor:
+    """Superblock metadata; never reclaimed, recycled via pools (§2.3)."""
+
+    __slots__ = ("anchor", "base", "block_size", "size_class", "nblocks",
+                 "persistent", "generation")
+
+    def __init__(self):
+        self.anchor = AtomicRef((EMPTY, 0, 0, 0))
+        self.base = -1  # arena offset of the superblock; -1 = no range owned
+        self.block_size = 0
+        self.size_class = -1
+        self.nblocks = 0
+        self.persistent = False
+        self.generation = 0  # bumped on every reuse; stale-entry filter
+
+
+class _TreiberStack:
+    """Lock-free stack of (descriptor, generation) entries."""
+
+    def __init__(self):
+        self._top = AtomicRef(None)  # linked tuples: (desc, gen, rest)
+
+    def push(self, desc: Descriptor) -> None:
+        while True:
+            top = self._top.load()
+            if self._top.cas(top, (desc, desc.generation, top)):
+                return
+
+    def pop(self):
+        while True:
+            top = self._top.load()
+            if top is None:
+                return None
+            desc, gen, rest = top
+            if self._top.cas(top, rest):
+                if desc.generation != gen:
+                    continue  # stale entry from a recycled descriptor
+                return desc
+
+
+@dataclass
+class AllocatorStats:
+    allocs: int = 0
+    frees: int = 0
+    cache_fills: int = 0
+    cache_flushes: int = 0
+    superblocks_created: int = 0
+    superblocks_reused_mapped: int = 0  # virtual range recycled (§3.2)
+    persistent_released: int = 0
+    large_allocs: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class _ThreadCache(threading.local):
+    def __init__(self):
+        # (size_class, persistent) -> list of free block offsets
+        self.stacks: dict[tuple[int, bool], list[int]] = {}
+
+
+class LRMalloc:
+    """The allocator.  Block "pointers" are integer offsets into the arena."""
+
+    #: soft per-class cache bound; a flush drains half of it back to the heap
+    CACHE_CAP = 256
+
+    def __init__(
+        self,
+        num_superblocks: int = 256,
+        superblock_size: int = 64 * 1024,
+        strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
+    ):
+        self.arena = Arena(num_superblocks, superblock_size, strategy)
+        self.sb_size = superblock_size
+        # pagemap: superblock base offset -> descriptor (dict ops are atomic
+        # under the GIL; the real pagemap is a flat lock-free array).
+        self.pagemap: dict[int, Descriptor] = {}
+        # partial-superblock stacks per (size class, persistent)
+        self._partial = {
+            (ci, p): _TreiberStack() for ci in range(NUM_CLASSES) for p in (False, True)
+        }
+        # descriptor recycling pools (§4): mapped pool first, generic second
+        self._pool_mapped = _TreiberStack()  # descriptors owning a live range
+        self._pool_generic = _TreiberStack()
+        self._cache = _ThreadCache()
+        self._large: dict[int, LargeAllocation] = {}
+        self._large_next = self.arena.total + superblock_size  # synthetic keys
+        self._large_lock = threading.Lock()
+        self.stats = AllocatorStats()
+        self._stats_lock = threading.Lock()
+
+    # -- public API ------------------------------------------------------------
+
+    def malloc(self, nbytes: int) -> int:
+        if nbytes > MAX_SZ:
+            return self._malloc_large(nbytes)
+        return self._malloc_sc(size_to_class(nbytes), persistent=False)
+
+    def palloc(self, nbytes: int) -> int:
+        """Persistent allocation: the returned block's address range stays
+        readable for the process lifetime even after ``free`` (paper §3.1).
+        Restricted to size-class sizes (paper §4)."""
+        if nbytes > MAX_SZ:
+            raise ValueError(
+                f"palloc restricted to size-class sizes <= {MAX_SZ} (paper §4)"
+            )
+        return self._malloc_sc(size_to_class(nbytes), persistent=True)
+
+    def free(self, off: int) -> None:
+        if off >= self.arena.total:
+            return self._free_large(off)
+        desc = self.pagemap[off - off % self.sb_size]
+        key = (desc.size_class, desc.persistent)
+        stack = self._cache.stacks.setdefault(key, [])
+        stack.append(off)
+        with self._stats_lock:
+            self.stats.frees += 1
+        if len(stack) > self.CACHE_CAP:
+            self._flush_cache(key, len(stack) // 2)
+
+    # convenience accessors used by data structures / tests
+    def read_u64(self, off: int) -> int:
+        return self.arena.read_u64(off)
+
+    def write_u64(self, off: int, val: int) -> None:
+        self.arena.write_u64(off, val)
+
+    def cas_u64(self, off: int, exp: int, new: int) -> bool:
+        return self.arena.cas_u64(off, exp, new)
+
+    def flush_all_caches(self) -> None:
+        """Flush this thread's caches (tests/benchmarks teardown)."""
+        for key in list(self._cache.stacks):
+            self._flush_cache(key, len(self._cache.stacks[key]))
+
+    # -- size-class path ---------------------------------------------------------
+
+    def _malloc_sc(self, ci: int, persistent: bool) -> int:
+        key = (ci, persistent)
+        stack = self._cache.stacks.setdefault(key, [])
+        if not stack:
+            self._fill_cache(ci, persistent, stack)
+        with self._stats_lock:
+            self.stats.allocs += 1
+        return stack.pop()
+
+    def _fill_cache(self, ci: int, persistent: bool, stack: list[int]) -> None:
+        with self._stats_lock:
+            self.stats.cache_fills += 1
+        # 1) try a partial superblock (paper: partials have priority)
+        while True:
+            desc = self._partial[(ci, persistent)].pop()
+            if desc is None:
+                break
+            got = self._reserve_all(desc)
+            if got:
+                self._stock_cache(desc, got, stack)
+                return
+        # 2) new superblock: mapped-descriptor pool > generic pool > fresh
+        desc = None
+        if persistent:
+            desc = self._pool_mapped.pop()
+            if desc is not None:
+                self.arena.prepare_reuse(desc.base)
+                with self._stats_lock:
+                    self.stats.superblocks_reused_mapped += 1
+        if desc is None:
+            desc = self._pool_generic.pop()
+        if desc is None:
+            desc = Descriptor()
+        if desc.base < 0:
+            desc.base = self.arena.acquire_superblock()
+        desc.generation += 1
+        bs = class_block_size(ci)
+        desc.block_size = bs
+        desc.size_class = ci
+        desc.nblocks = self.sb_size // bs
+        desc.persistent = persistent
+        # Initial state is FULL: every block goes straight to the cache (§2.3).
+        tag = desc.anchor.load()[3]
+        desc.anchor.store((FULL, 0, 0, tag + 1))
+        self.pagemap[desc.base] = desc
+        with self._stats_lock:
+            self.stats.superblocks_created += 1
+        start = desc.base
+        if start == 0:
+            # Burn block 0 so offset 0 serves as NULL.  Superblock 0 can then
+            # never reach EMPTY (count tops out at nblocks-1) — it lives for
+            # the process lifetime, which is exactly what a NULL guard needs.
+            start += bs
+        self._stock_cache(
+            desc, list(range(start, desc.base + desc.nblocks * bs, bs)), stack
+        )
+
+    def _stock_cache(self, desc: Descriptor, blocks: list[int], stack: list[int]) -> None:
+        """Keep at most CACHE_CAP blocks in the cache; surplus returns to the
+        superblock in one anchor CAS (LRMalloc reserves up to the cache
+        capacity — superblocks go FULL at creation then immediately PARTIAL
+        with the surplus published for other threads)."""
+        if len(blocks) > self.CACHE_CAP:
+            self._return_blocks(desc, blocks[self.CACHE_CAP :])
+            blocks = blocks[: self.CACHE_CAP]
+        stack.extend(blocks)
+
+    def _reserve_all(self, desc: Descriptor) -> list[int]:
+        """MallocFromPartial: one CAS claims every available block, then the
+        claimant privately walks the in-memory free list."""
+        while True:
+            state, avail, count, tag = desc.anchor.load()
+            if state != PARTIAL or count == 0:
+                return []
+            if desc.anchor.cas((state, avail, count, tag), (FULL, 0, 0, tag + 1)):
+                blocks = []
+                off = avail
+                for _ in range(count):
+                    blocks.append(off)
+                    off = self.arena.read_u64(off)
+                return blocks
+
+    def _flush_cache(self, key: tuple[int, bool], n: int) -> None:
+        """Return ``n`` cached blocks to their superblocks (anchor CAS per
+        group), handling FULL->PARTIAL and PARTIAL->EMPTY transitions."""
+        stack = self._cache.stacks[key]
+        with self._stats_lock:
+            self.stats.cache_flushes += 1
+        by_desc: dict[int, list[int]] = {}
+        for _ in range(min(n, len(stack))):
+            off = stack.pop()
+            by_desc.setdefault(off - off % self.sb_size, []).append(off)
+        for base, blocks in by_desc.items():
+            self._return_blocks(self.pagemap[base], blocks)
+
+    def _return_blocks(self, desc: Descriptor, blocks: list[int]) -> None:
+        while True:
+            state, avail, count, tag = desc.anchor.load()
+            # thread the group through block memory: last -> current avail
+            for i, off in enumerate(blocks):
+                nxt = blocks[i + 1] if i + 1 < len(blocks) else avail
+                self.arena.write_u64(off, nxt)
+            new_count = count + len(blocks)
+            new_state = EMPTY if new_count == desc.nblocks else PARTIAL
+            if desc.anchor.cas(
+                (state, avail, count, tag), (new_state, blocks[0], new_count, tag + 1)
+            ):
+                if new_state == EMPTY:
+                    self._retire_superblock(desc)
+                elif state == FULL:  # FULL -> PARTIAL: publish for fills
+                    self._partial[(desc.size_class, desc.persistent)].push(desc)
+                return
+
+    def _retire_superblock(self, desc: Descriptor) -> None:
+        """EMPTY transition (Fig. 2): non-persistent superblocks release their
+        range to the OS; persistent ones run the release strategy and park
+        their descriptor (still owning the range) in the mapped pool."""
+        base = desc.base
+        self.pagemap.pop(base, None)
+        desc.generation += 1  # invalidate stale partial-stack entries
+        self.arena.release_superblock(base, desc.persistent)
+        if desc.persistent:
+            with self._stats_lock:
+                self.stats.persistent_released += 1
+            self._pool_mapped.push(desc)
+        else:
+            desc.base = -1
+            self._pool_generic.push(desc)
+
+    # -- large allocations (paper §4: straight to the OS) -----------------------
+
+    def _malloc_large(self, nbytes: int) -> int:
+        la = LargeAllocation(nbytes)
+        with self._large_lock:
+            key = self._large_next
+            self._large_next += ((nbytes + self.sb_size - 1) // self.sb_size) * self.sb_size
+            self._large[key] = la
+            self.stats.large_allocs += 1
+        return key
+
+    def _free_large(self, off: int) -> None:
+        with self._large_lock:
+            la = self._large.pop(off)
+        la.close()
+
+    # -- introspection -----------------------------------------------------------
+
+    def resident_bytes(self) -> int:
+        return self.arena.resident_bytes()
+
+    def close(self) -> None:
+        self.arena.close()
+        for la in self._large.values():
+            la.close()

@@ -1,0 +1,152 @@
+"""Device-side paged KV-cache pool with Optimistic-Access semantics.
+
+This is the TPU-native adaptation of the paper (DESIGN.md §2):
+
+- The KV page arrays are allocated ONCE for the process lifetime — freed
+  pages stay addressable forever and gathers through stale block tables can
+  never fault.  That is exactly the guarantee ``palloc`` gives OA on the
+  host: *memory stays readable after free; contents are undefined*.
+- Every page carries a **version counter** (bumped on free) and the pool a
+  **global clock** (bumped on every reclamation batch) — the OA-VER warning
+  channel.  A reader (a decode step that overlaps with scheduling) snapshots
+  versions before launch and validates after: a mismatch means the page was
+  reclaimed mid-flight, the result is discarded and the request restarts
+  from a known-valid state — the OA read protocol, verbatim.
+- Writes (appending a token's KV) are only ever issued to pages *pinned* by
+  the scheduler for the in-flight batch — the hazard-pointer half of OA,
+  enforced structurally.
+
+All state lives in a JAX pytree; all operations are pure and jit-able, so
+the pool shards with the serving mesh (pages over 'data', heads over
+'model') and the alloc/free path adds no host-device sync.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagePool(NamedTuple):
+    free_stack: jax.Array  # [num_pages] int32, LIFO; valid in [0, free_top)
+    free_top: jax.Array  # [] int32 — number of free pages
+    page_version: jax.Array  # [num_pages] uint32 — bumped on every free
+    clock: jax.Array  # [] uint32 — global reclamation clock (OA-VER)
+
+    @property
+    def num_pages(self) -> int:
+        return self.free_stack.shape[0]
+
+
+def pool_init(num_pages: int) -> PagePool:
+    return PagePool(
+        free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.asarray(num_pages, jnp.int32),
+        page_version=jnp.zeros((num_pages,), jnp.uint32),
+        clock=jnp.zeros((), jnp.uint32),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=1, donate_argnums=0)
+def alloc_pages(pool: PagePool, n: int):
+    """Pop ``n`` pages.  Returns (pool, pages [n] int32, ok).
+
+    On exhaustion (ok=False) no state changes and pages are -1 — the caller
+    (scheduler) must reclaim (preempt a victim) and retry, which mirrors the
+    allocator's fill-from-heap / trigger-reclamation path.
+    """
+    top = pool.free_top
+    ok = top >= n
+    idx = top - 1 - jnp.arange(n, dtype=jnp.int32)
+    pages = jnp.where(
+        ok & (idx >= 0), pool.free_stack[jnp.maximum(idx, 0)], -1
+    ).astype(jnp.int32)
+    new_top = jnp.where(ok, top - n, top)
+    return pool._replace(free_top=new_top), pages, ok
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Push pages (−1 entries ignored) and fire the warning: each page's
+    version bumps and the global clock ticks once per batch (one warning per
+    reclamation batch — Alg. 1/2's single barrier)."""
+    valid = pages >= 0
+    npages = pool.free_stack.shape[0]
+    pos = pool.free_top + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    slot = jnp.where(valid, pos, npages)  # OOB -> dropped
+    stack = pool.free_stack.at[slot].set(pages, mode="drop")
+    pidx = jnp.where(valid, pages, npages)
+    version = pool.page_version.at[pidx].add(1, mode="drop")
+    return PagePool(
+        free_stack=stack,
+        free_top=pool.free_top + jnp.sum(valid.astype(jnp.int32)),
+        page_version=version,
+        clock=pool.clock + 1,
+    )
+
+
+@jax.jit
+def snapshot_versions(pool: PagePool, pages: jax.Array) -> jax.Array:
+    """Versions of ``pages`` (−1 entries read as 0) — the reader's LocalClock."""
+    return jnp.where(pages >= 0, pool.page_version[jnp.maximum(pages, 0)], 0)
+
+
+@jax.jit
+def validate_read(pool: PagePool, pages: jax.Array, snapshot: jax.Array) -> jax.Array:
+    """OA check: True iff none of ``pages`` were reclaimed since ``snapshot``.
+    (A reclaim bumps the version BEFORE the page can be re-allocated, so a
+    stale optimistic read is always caught — the warning-before-free order
+    of Alg. 1.)"""
+    cur = jnp.where(pages >= 0, pool.page_version[jnp.maximum(pages, 0)], 0)
+    return jnp.all(cur == snapshot)
+
+
+# ---------------------------------------------------------------------------
+# KV page storage
+
+
+def kv_pages_init(num_pages: int, page_size: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    """The persistent KV arena: allocated once, never released (palloc).
+    Layout: [num_pages, page_size, n_kv_heads, head_dim] for each of k/v."""
+    shape = (num_pages, page_size, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def append_kv(kv, block_tables, lengths, k_new, v_new):
+    """Write one new token's K/V for each sequence.
+
+    kv: page arrays; block_tables [B, max_pages] int32 (−1 = unmapped);
+    lengths [B] int32 current lengths (new token goes at position ``lengths``);
+    k_new/v_new [B, n_kv_heads, head_dim].
+
+    Only pages pinned in a live block table are written — the scheduler
+    guarantees these are not concurrently freed (hazard-pointer discipline).
+    """
+    page_size = kv["k"].shape[1]
+    B = lengths.shape[0]
+    page_idx = lengths // page_size
+    slot = lengths % page_size
+    pages = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    valid = pages >= 0
+    p = jnp.where(valid, pages, kv["k"].shape[0])  # OOB -> dropped
+    k = kv["k"].at[p, slot].set(k_new, mode="drop")
+    v = kv["v"].at[p, slot].set(v_new, mode="drop")
+    return {"k": k, "v": v}
+
+
+def gather_kv(kv, block_table, max_len: int):
+    """Optimistic gather of one sequence's KV as [max_len, Hkv, D] (reference
+    path; the Pallas kernel does this page-at-a-time in VMEM).  Reads through
+    freed pages are SAFE (arena is persistent) and their content is ignored
+    after version validation fails."""
+    page_size = kv["k"].shape[1]
+    n = max_len // page_size
+    pages = jnp.maximum(block_table[:n], 0)
+    k = kv["k"][pages].reshape(n * page_size, *kv["k"].shape[2:])
+    v = kv["v"][pages].reshape(n * page_size, *kv["v"].shape[2:])
+    return k, v

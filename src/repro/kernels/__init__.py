@@ -1,0 +1,8 @@
+# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
+# for compute hot-spots the paper itself optimizes with a custom
+# kernel. Leave this package empty if the paper has none.
+from .ops import paged_attention
+from .ref import paged_attention_ref
+from .kv_append import kv_append_pallas
+
+__all__ = ["paged_attention", "paged_attention_ref", "kv_append_pallas"]

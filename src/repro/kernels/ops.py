@@ -1,0 +1,32 @@
+"""Jit'd public wrappers for the kernels.
+
+``impl`` selection:
+- "pallas"    — pl.pallas_call compiled for TPU (the production path)
+- "interpret" — same kernel body executed in Python on CPU (correctness)
+- "ref"       — the pure-jnp oracle (fast on CPU; used by the serving engine
+                in this container)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .paged_attention import paged_attention_pallas
+from .ref import paged_attention_ref
+
+
+def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref"):
+    """Decode attention over the paged pool.
+
+    q [B, Hq, D]; kv {'k','v': [P, page, Hkv, D]}; block_tables [B, max_pages];
+    lengths [B].  Returns [B, Hq, D].
+    """
+    if impl == "ref":
+        return paged_attention_ref(q, kv["k"], kv["v"], block_tables, lengths)
+    page_size = kv["k"].shape[1]
+    n_kv_heads = kv["k"].shape[2]
+    return paged_attention_pallas(
+        q, kv["k"], kv["v"], block_tables, lengths,
+        page_size=page_size, n_kv_heads=n_kv_heads,
+        interpret=(impl == "interpret"),
+    )

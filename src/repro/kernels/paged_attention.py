@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: decode attention over the versioned page pool.
+
+This is the compute hot-spot of the paper's device-side adaptation: the
+optimistic reader.  It walks a sequence's block table page-by-page, DMA'ing
+each KV page HBM→VMEM exactly once and keeping the flash accumulator state
+(m, l, acc) in VMEM scratch — the jnp reference path instead materializes
+the gathered [S, Hkv, D] cache in HBM (2× traffic on the dominant term of
+the decode roofline; see EXPERIMENTS.md §Perf).
+
+TPU mapping:
+- grid = (batch, max_pages); the block table rides in scalar-prefetch memory
+  (SMEM) so the ``index_map`` can translate virtual page slots to physical
+  page ids *before* the DMA is issued — the pagemap lookup of LRMalloc, done
+  by the DMA engine.
+- Freed pages remain mapped in the persistent arena, so a stale block table
+  entry fetches garbage *safely*; the scheduler's version check discards the
+  result (OA semantics — reads validated after the fact).
+- Block shapes: KV pages arrive as (page_size, Hkv*D) tiles — page_size and
+  Hkv*D should be multiples of (8, 128) for MXU/VREG alignment; q is
+  (Hkv*G, D) = (Hq, D).
+
+Weak spots the sweep tests cover: GQA grouping, ragged lengths mid-page,
+unmapped (-1) table entries, page_size not dividing length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    # scalar-prefetch
+    block_tables_ref,  # [B, max_pages] (SMEM)
+    lengths_ref,  # [B] (SMEM)
+    # blocked inputs
+    q_ref,  # [1, Hq, D]
+    k_ref,  # [1, page, Hkv, D]
+    v_ref,  # [1, page, Hkv, D]
+    # output
+    o_ref,  # [1, Hq, D]
+    # VMEM scratch
+    m_ref,  # [Hq]
+    l_ref,  # [Hq]
+    acc_ref,  # [Hq, D]
+    *,
+    page_size: int,
+    n_kv_heads: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [Hq, D]
+    k = k_ref[0]  # [page, Hkv, D]
+    v = v_ref[0]
+    Hq, D = q.shape
+    G = Hq // n_kv_heads
+    qg = q.reshape(n_kv_heads, G, D).astype(jnp.float32)
+    # [Hkv, G, page] — lowers to one MXU dot per kv head
+    s = jnp.einsum("hgd,phd->hgp", qg, k.astype(jnp.float32))
+    s = s * (1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)))
+
+    pos = i * page_size + jax.lax.iota(jnp.int32, page_size)
+    live = (pos < lengths_ref[b]) & (block_tables_ref[b, i] >= 0)
+    s = jnp.where(live[None, None, :], s, -jnp.inf)
+
+    m_prev = m_ref[...].reshape(n_kv_heads, G)
+    l_prev = l_ref[...].reshape(n_kv_heads, G)
+    acc_prev = acc_ref[...].reshape(n_kv_heads, G, D)
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(live[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("hgp,phd->hgd", p, v.astype(jnp.float32))
+    acc_new = acc_prev * alpha[..., None] + pv
+
+    m_ref[...] = m_new.reshape(Hq)
+    l_ref[...] = l_new.reshape(Hq)
+    acc_ref[...] = acc_new.reshape(Hq, D)
+
+    @pl.when(i == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...].reshape(n_kv_heads, G), 1e-30)
+        out = acc_ref[...].reshape(n_kv_heads, G, D) / l[..., None]
+        o_ref[0] = out.reshape(Hq, D).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_size", "n_kv_heads", "interpret")
+)
+def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
+                           page_size: int, n_kv_heads: int, interpret: bool = True):
+    """q [B, Hq, D] -> [B, Hq, D].  See module docstring for layout rules."""
+    B, Hq, D = q.shape
+    max_pages = block_tables.shape[1]
+
+    def page_map(b, i, bt, ln):
+        return (jnp.maximum(bt[b, i], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, n_kv_heads, D), page_map),
+            pl.BlockSpec((1, page_size, n_kv_heads, D), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, page_size=page_size, n_kv_heads=n_kv_heads)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``paged_attention_ref`` is the reference semantics for decode attention over
+the versioned page pool: gather pages through the block table (reads through
+freed pages are safe — the arena is persistent), mask to the live length,
+online softmax.  The Pallas kernel must match this bit-for-bit in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q [B, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
+    block_tables [B, max_pages] int32 (−1 = unmapped); lengths [B] int32.
+    Returns [B, Hq, D] (q.dtype)."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    def one(qb, bt, ln):
+        pages = jnp.maximum(bt, 0)
+        k = k_pages[pages].reshape(max_pages * page, Hkv, D)
+        v = v_pages[pages].reshape(max_pages * page, Hkv, D)
+        qg = qb.reshape(Hkv, G, D).astype(jnp.float32)
+        s = jnp.einsum("hgd,shd->hgs", qg, k.astype(jnp.float32)) * scale
+        pos = jnp.arange(max_pages * page)
+        s = jnp.where(pos[None, None, :] < ln, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hgs,shd->hgd", p, v.astype(jnp.float32))
+        return o.reshape(Hq, D)
+
+    return jax.vmap(one)(q, block_tables, lengths).astype(q.dtype)

@@ -1,0 +1,332 @@
+"""Trip-count-corrected analysis of compiled (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each computation ONCE —
+a ``while`` body executed L times (every ``lax.scan``, i.e. every
+scan-over-layers model here) is counted a single time, understating FLOPs и
+bytes by ~L x.  The partitioned HLO text, however, carries
+``backend_config={"known_trip_count":{"n":"L"}}`` on every while op, so an
+exact correction is possible by walking the call graph with multipliers.
+
+Outputs per compiled module (all PER DEVICE — the module is the partitioned
+per-partition program):
+
+- ``dot_flops``      — 2 * prod(output) * prod(contracting dims) over all dot
+                       ops, x trip multipliers.  Matmul-only (elementwise and
+                       reductions excluded — they are bandwidth, not MXU).
+- ``hbm_bytes``      — HBM traffic estimate: per top-level op, operand bytes
+                       + output bytes, with slice/dus counting only the bytes
+                       actually touched and fusion ops counting their
+                       parameters/outputs (internals live in registers/VMEM).
+- ``collectives``    — per type: bytes moved per device on the interconnect,
+                       x trip multipliers, using standard ring-algorithm cost
+                       factors (all-reduce 2x, all-gather/reduce-scatter
+                       (n-1)/n ~= 1x, all-to-all (n-1)/n, permute 1x).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:body|calls)=%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of an array (or tuple) type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opcode", "rest", "operands")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.rest = rest
+        # operand names appear before attribute text; cut at '), ' boundary
+        paren_depth = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                paren_depth += 1
+            elif ch == ")":
+                if paren_depth == 0:
+                    end = i
+                    break
+                paren_depth -= 1
+        self.operands = _OPERAND_RE.findall(rest[:end])
+
+
+def parse_computations(txt: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur = None
+    for line in txt.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            comps[cur].append(Op(*mo.groups()))
+    return comps
+
+
+def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
+    out_elems = _shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = symtab.get(op.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci != "" and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+# opcodes that move data but whose full operands are NOT all touched
+_SLICELIKE = {"dynamic-slice", "slice", "gather"}
+_UPDATELIKE = {"dynamic-update-slice", "scatter"}
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def analyze(txt: str, *, n_shards_hint: int = 16) -> dict:
+    comps = parse_computations(txt)
+    symtabs = {
+        cname: {op.name: op.type_str for op in ops} for cname, ops in comps.items()
+    }
+
+    # call-graph multipliers: while bodies get x trip_count, everything else x1
+    mult: dict[str, float] = defaultdict(float)
+    entry = None
+    for cname in comps:
+        if cname.startswith("main") or ".main" in cname:
+            entry = cname
+    if entry is None:  # fall back: computation with a while op, else largest
+        entry = max(comps, key=lambda c: len(comps[c]))
+    fusion_internal: set[str] = set()
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = _CALL_ATTR_RE.search(op.rest)
+                if m:
+                    fusion_internal.add(m.group(1))
+
+    # per-fusion-computation parameter costs: a parameter consumed ONLY by
+    # slice-like ops costs its slice outputs, not its full extent (stacked
+    # scan weights are dynamic-sliced inside fusions — counting them whole
+    # would overstate HBM traffic by the layer count)
+    # "transparent" ops move no HBM bytes of their own inside a fusion (and
+    # bf16->f32 convert wrappers around scatter/DUS are CPU-backend lowering
+    # artifacts that do not exist on TPU)
+    _TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+    fusion_param_cost: dict[str, dict[int, float | None]] = {}
+    fusion_out_cost: dict[str, float] = {}  # override for in-place-DUS fusions
+    for cname in fusion_internal:
+        ops = comps.get(cname, [])
+        uses: dict[str, list[Op]] = defaultdict(list)
+        for op in ops:
+            for o in op.operands:
+                uses[o].append(op)
+
+        def terminals(name, depth=0):
+            """Terminal (non-transparent) consumers of a value, with the
+            direct operand name by which each consumer sees it."""
+            out = []
+            if depth > 6:
+                return out
+            for c in uses.get(name, []):
+                if c.opcode in _TRANSPARENT:
+                    out.extend(terminals(c.name, depth + 1))
+                else:
+                    out.append((c, name))
+            return out
+
+        per_param: dict[int, float | None] = {}
+        for op in ops:
+            if op.opcode == "parameter":
+                mi = re.match(r"(\d+)", op.rest)
+                if not mi:
+                    continue
+                idx = int(mi.group(1))
+                cons = terminals(op.name)
+                if cons and all(c.opcode in _SLICELIKE for c, _ in cons):
+                    per_param[idx] = sum(_shape_bytes(c.type_str) for c, _ in cons)
+                elif cons and all(
+                    c.opcode == "dynamic-update-slice" and c.operands
+                    and c.operands[0] == via
+                    for c, via in cons
+                ):
+                    # in-place update target (while-carry caches): XLA buffer
+                    # assignment aliases these; only the updated window moves
+                    per_param[idx] = 0.0
+                else:
+                    per_param[idx] = None  # full extent
+        fusion_param_cost[cname] = per_param
+        # if the fusion ROOT is (transparently) a dynamic-update-slice, the
+        # "output" is the aliased buffer: charge update bytes, not full extent
+        if ops:
+            by_name = {o.name: o for o in ops}
+            root = ops[-1]
+            hops = 0
+            while root.opcode in _TRANSPARENT and root.operands and hops < 6:
+                nxt = by_name.get(root.operands[0])
+                if nxt is None:
+                    break
+                root = nxt
+                hops += 1
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                symtab_f = {o.name: o.type_str for o in ops}
+                fusion_out_cost[cname] = _shape_bytes(
+                    symtab_f.get(root.operands[1], "")
+                )
+
+    mult[entry] = 1.0
+    # propagate through while/call/fusion edges (iterate to fixpoint; graphs
+    # are shallow: entry -> while bodies -> nested)
+    for _ in range(8):
+        changed = False
+        for cname, ops in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for op in ops:
+                if op.opcode == "while":
+                    tm = _TRIP_RE.search(op.rest)
+                    trip = float(tm.group(1)) if tm else 1.0
+                    for attr_re in (_CALL_ATTR_RE, _COND_ATTR_RE):
+                        am = attr_re.search(op.rest)
+                        if am:
+                            tgt = am.group(1)
+                            new = base * (trip if attr_re is _CALL_ATTR_RE else trip + 1)
+                            if new > mult.get(tgt, 0.0):
+                                mult[tgt] = new
+                                changed = True
+                elif op.opcode in ("call", "async-start", "conditional"):
+                    for tgt in _CALL_ATTR_RE.findall(op.rest):
+                        if base > mult.get(tgt, 0.0):
+                            mult[tgt] = base
+                            changed = True
+        if not changed:
+            break
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, int] = defaultdict(int)
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or cname in fusion_internal:
+            # fusion internals: dots never appear inside kLoop fusions on this
+            # backend; bytes are accounted at the fusion op itself.
+            if cname in fusion_internal:
+                continue
+            continue
+        symtab = symtabs[cname]
+        for op in ops:
+            oc = op.opcode
+            if oc in ("dot", "convolution"):
+                flops += m * _dot_flops(op, symtab)
+            if oc in _FREE or oc == "while":
+                continue
+            out_b = _shape_bytes(op.type_str)
+            if oc in _COLLECTIVES:
+                base = oc.replace("-start", "")
+                if base == "all-reduce":
+                    moved = 2.0 * out_b
+                elif base == "reduce-scatter":
+                    moved = out_b * n_shards_hint  # out is the scattered shard
+                elif base == "all-to-all":
+                    moved = out_b
+                elif base == "all-gather":
+                    moved = out_b  # out is the gathered (full) buffer
+                else:  # collective-permute
+                    moved = out_b
+                coll_bytes[base] += m * moved
+                coll_count[base] += int(m)
+                continue
+            if oc in _SLICELIKE:
+                hbm += m * 2 * out_b
+            elif oc in _UPDATELIKE:
+                upd = symtab.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                hbm += m * 2 * _shape_bytes(upd)
+            elif oc == "fusion":
+                cm = _CALL_ATTR_RE.search(op.rest)
+                callee = cm.group(1) if cm else ""
+                costs = fusion_param_cost.get(callee, {})
+                in_b = 0.0
+                for i, o in enumerate(op.operands):
+                    c = costs.get(i, None)
+                    in_b += c if c is not None else _shape_bytes(symtab.get(o, ""))
+                ob = fusion_out_cost.get(callee, out_b)
+                hbm += m * (in_b + ob)
+            else:
+                in_b = sum(_shape_bytes(symtab.get(o, "")) for o in op.operands)
+                hbm += m * (in_b + out_b)
+
+    return {
+        "dot_flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_counts": dict(coll_count),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as a FUNCTION (not a module-level constant) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) 'data' x 'model' single pod; (2,16,16) 'pod' x 'data' x 'model'
+    across two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}; have {len(devices)}. "
+            "The dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax."
+        )
+    return jax.make_mesh(
+        shape, axes,
+        devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for in-subprocess sharding tests (8 forced host devices)."""
+    return jax.make_mesh(
+        shape, axes,
+        devices=jax.devices()[: shape[0] * shape[1]],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

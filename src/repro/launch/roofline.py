@@ -1,0 +1,178 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape) cell, all PER DEVICE per step, from the
+trip-count-corrected HLO analysis (see hlo_analysis.py for why raw
+cost_analysis cannot be used):
+
+    compute    = dot_flops / PEAK_FLOPS
+    memory     = hbm_bytes / HBM_BW
+    collective = collective_bytes / LINK_BW
+
+plus MODEL_FLOPS (the 6·N·D / 2·N·D analytic "useful" flops), the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat and dispatch
+waste), and the roofline fraction = ideal-time / dominant-term-time — the
+score a perfectly-overlapped implementation would push to 1.0.
+
+Hardware model (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+CPU-backend caveat (documented in EXPERIMENTS.md): the compiled module
+carries bf16<->f32 converts that DO NOT exist on TPU; hbm_bytes and peak
+memory are therefore upper bounds.  An analytic bf16-native floor is
+reported alongside for decode cells (weights/TP + KV cache), where the
+artifact is largest.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline --dir artifacts/dryrun_v2
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256  # single-pod roofline table
+
+
+def count_params(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts via eval_shape (no allocation)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    tree = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = expert = 0
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [str(p.key) for p in path if hasattr(p, "key")]
+        if "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    active = total - expert
+    if cfg.moe and cfg.n_experts:
+        active += expert * cfg.top_k / cfg.n_experts
+    return float(total), float(active)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful flops per device per step (6ND train / 2ND fwd)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    total, active = count_params(arch)
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * active * tokens / CHIPS
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * active * tokens / CHIPS
+    # decode: one token per sequence
+    return 2.0 * active * sh.global_batch / CHIPS
+
+
+def decode_native_floor_gib(arch: str, shape_name: str) -> float | None:
+    """Analytic bf16-native per-device residency for decode cells:
+    TP-resident params + sharded KV cache (the CPU f32 artifact excluded)."""
+    import jax
+
+    from repro.configs import SHAPES, decode_cache_size, get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    if sh.kind != "decode":
+        return None
+    total, _ = count_params(arch)
+    params_gib = total * 2 / 16 / 2**30  # bf16, TP=16
+    model = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(sh.global_batch, decode_cache_size(cfg, sh)))
+    cache_bytes = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    shards = 16 * (16 if sh.global_batch % 16 == 0 else 1)
+    return params_gib + cache_bytes / shards / 2**30
+
+
+def build_table(art_dir: str, mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, f"*_{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh:
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "status": r["status"]}
+        if r["status"] == "skipped":
+            row["note"] = r["reason"].split(":")[0]
+            rows.append(row)
+            continue
+        if r["status"] != "ok":
+            row["note"] = r.get("error", "")[:80]
+            rows.append(row)
+            continue
+        h = r["hlo"]
+        ct = h["dot_flops"] / PEAK_FLOPS
+        mt = h["hbm_bytes"] / HBM_BW
+        lt = h["collective_bytes_total"] / LINK_BW
+        dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+                  key=lambda kv: kv[1])
+        mf = model_flops(r["arch"], r["shape"])
+        ideal = mf / PEAK_FLOPS
+        row.update(
+            compute_s=ct, memory_s=mt, collective_s=lt,
+            dominant=dom[0], dominant_s=dom[1],
+            model_flops=mf,
+            useful_ratio=mf / h["dot_flops"] if h["dot_flops"] else 0.0,
+            roofline_fraction=ideal / dom[1] if dom[1] else 0.0,
+            peak_gib=r["memory"]["peak_bytes_est"] / 2**30,
+            native_floor_gib=decode_native_floor_gib(r["arch"], r["shape"]),
+            compile_s=r.get("compile_seconds"),
+        )
+        rows.append(row)
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | coll s | dominant | useful ratio | roofline frac | peak GiB (native est.) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | {r.get('note','')} |")
+            continue
+        nf = r.get("native_floor_gib")
+        peak = f"{r['peak_gib']:.1f}" + (f" ({nf:.1f})" if nf else "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | {peak} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun_v2")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = build_table(args.dir, args.mesh)
+    print(render_markdown(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Step functions composed from model + optimizer (used by train/serve/dryrun)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, grad_compression: str = "none"):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_compression='bf16'`` casts gradients to bf16 before the (implicit)
+    data-parallel all-reduce — halves gradient-sync bytes at <0.1% quality
+    cost (error stays in the fp32 moments).
+    """
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        if grad_compression == "bf16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        params, opt_state, info = adamw_update(opt_cfg, params, grads, opt_state)
+        out = {"loss": loss, **metrics, **info}
+        return params, opt_state, out
+
+    return step
+
+
+def make_prefill_step(model, cache_size: int):
+    def step(params, batch):
+        return model.prefill(params, batch, cache_size)
+
+    return step
+
+
+def make_decode_step(model):
+    def step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return step

@@ -1,0 +1,112 @@
+"""Top-level model API: one object per architecture config.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    loss, metrics = model.loss(params, batch)          # training objective
+    cache, logits = model.prefill(params, batch, n)    # inference prefill
+    logits, cache = model.decode_step(params, cache, b)
+    cache = model.init_cache(batch_size, cache_size)
+
+The loss computes cross-entropy in sequence chunks (logits for one chunk at
+a time inside a scan) so the [B, S, vocab] fp32 logits tensor — which for a
+256k vocab would dwarf every activation — is never materialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_logits
+
+from . import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    forward: Callable  # (params, batch) -> (hidden [B,S,d], aux_loss)
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch, cache_size) -> (cache, logits)
+    decode_step: Callable  # (params, cache, batch) -> (logits, cache)
+    init_cache: Callable  # (batch_size, cache_size) -> cache
+
+
+def _chunked_ce(cfg, params, hidden, labels, mask):
+    """hidden [B,S,d], labels/mask [B,S] -> mean NLL over masked positions."""
+    B, S, d = hidden.shape
+    chunk = min(cfg.loss_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = hidden.shape[1] // chunk
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    hs = jnp.moveaxis(hidden.reshape(B, nch, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nch, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nch, chunk), 1, 0)
+
+    def body(carry, inp):
+        h, lbl, msk = inp
+        logits = shard_logits(h @ w).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * msk
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(msk)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def build_model(cfg) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        init, fwd = T.init_decoder_lm, T.decoder_forward
+        prefill, decode = T.decoder_prefill, T.decoder_decode_step
+        init_cache = T.decoder_init_cache
+    elif fam == "audio":
+        init, fwd = T.init_encdec, T.encdec_forward
+        prefill, decode = T.encdec_prefill, T.encdec_decode_step
+        init_cache = T.encdec_init_cache
+    elif fam == "hybrid":
+        init, fwd = T.init_hybrid, T.hybrid_forward
+        prefill, decode = T.hybrid_prefill, T.hybrid_decode_step
+        init_cache = T.hybrid_init_cache
+    elif fam == "ssm":
+        init, fwd = T.init_ssm_lm, T.ssm_forward
+        prefill, decode = T.ssm_prefill, T.ssm_decode_step
+        init_cache = T.ssm_init_cache
+    else:
+        raise ValueError(fam)
+
+    def loss_fn(params, batch):
+        hidden, aux = fwd(cfg, params, batch)
+        tokens = batch["tokens"]
+        if cfg.prefix_tokens:  # VLM: loss only on the text suffix
+            hidden = hidden[:, batch["patches"].shape[1] :, :]
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(
+            jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1))
+        )
+        ce = _chunked_ce(cfg, params, hidden, labels, mask)
+        loss = ce + cfg.moe_aux_coef * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: init(cfg, rng),
+        forward=lambda params, batch: fwd(cfg, params, batch),
+        loss=loss_fn,
+        prefill=lambda params, batch, n: prefill(cfg, params, batch, n),
+        decode_step=lambda params, cache, batch: decode(cfg, params, cache, batch),
+        init_cache=(
+            (lambda bs, n: init_cache(cfg, bs, n)) if init_cache else None
+        ),
+    )

@@ -1,0 +1,157 @@
+"""Token-choice top-k Mixture of Experts with capacity-bounded scatter dispatch.
+
+Dispatch uses scatter/gather (linear data movement) instead of GShard's
+one-hot dispatch einsum (whose FLOPs, S·E·C·d per group, dwarf the expert
+compute itself), and processes the sequence in GROUPS (lax.scan over chunks
+of ``MOE_SEQ_CHUNK`` tokens, GShard's "groups"): dispatch buffers scale with
+the chunk, not the sequence — a top-8 router otherwise materializes
+k·cf ≈ 10x the token bytes per layer, which is what blew the olmoe train
+cell past HBM in the v1 sweep (EXPERIMENTS.md §Perf, iteration 3).
+
+Capacity is per (batch row, chunk): C = ceil(chunk·k·cf / E).
+
+Shapes (per layer):
+  router   [d, E]
+  experts  w_gate/w_up [E, d, ff], w_down [E, ff, d]   (swiglu)
+  buffers  [B, E, C, d] per chunk
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_experts, shard_seq
+
+MOE_SEQ_CHUNK = 512
+
+
+def moe_capacity(cfg, group_len: int) -> int:
+    return max(1, int(math.ceil(group_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts)))
+
+
+def init_moe(cfg, key, dtype=jnp.bfloat16):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    std_in, std_out = 0.02, 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_router": (jax.random.normal(ks[0], (d, E)) * std_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff)) * std_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff)) * std_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d)) * std_out).astype(dtype),
+    }
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _combine_core(tail_shape, dtype_name):
+    """y_flat = out[b, fe, sl] * keep — with a hand-written transpose.
+
+    The automatic transpose of a vmap'd gather is a scatter-add whose batch
+    dim SPMD fails to partition (it all-gathers the full-batch cotangent —
+    1.1 TB/step on the olmoe cell).  Writing the backward as the SAME
+    vmap'd ``.at[].add`` form the forward dispatch uses keeps it local.
+    """
+    import ml_dtypes
+    try:
+        odtype = jnp.dtype(dtype_name)
+    except TypeError:
+        odtype = jnp.dtype(getattr(ml_dtypes, dtype_name))
+
+    @jax.custom_vjp
+    def combine(out, fe, sl, keepf):
+        g = jax.vmap(lambda ob, f, s: ob[f, s])(out, fe, sl)
+        return g * keepf[..., None]
+
+    def fwd(out, fe, sl, keepf):
+        return combine(out, fe, sl, keepf), (fe, sl, keepf)
+
+    def bwd(res, dg):
+        fe, sl, keepf = res
+        dgk = (dg * keepf[..., None]).astype(odtype)
+        dout = jax.vmap(
+            lambda g, f, s: jnp.zeros(tail_shape, odtype).at[f, s].add(
+                g, mode="drop")
+        )(dgk, fe, sl)
+        return dout, None, None, None
+
+    combine.defvjp(fwd, bwd)
+    return combine
+
+
+def _combine(out, fe, sl, keepf):
+    core = _combine_core(tuple(out.shape[1:]), out.dtype.name)
+    return core(out, fe, sl, keepf)
+
+
+def _moe_group(cfg, x, p):
+    """One token group. x [B, S, d] -> (y [B, S, d], aux fp32)."""
+    x = shard_seq(x)  # pin group inputs (and their cotangents) sharded
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # [B,S,E]
+    gate, expert = jax.lax.top_k(probs, k)  # [B,S,k]
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+
+    # load-balancing aux loss (Switch/Mixtral style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = E * jnp.sum(me * ce)
+
+    # position of each assignment within its expert, per batch row
+    flat_e = expert.reshape(B, S * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [B, S*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)  # [B, S*k]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, pos_in_e, C)  # C = out-of-bounds -> dropped
+
+    # scatter tokens into [B, E, C, d].  vmap over batch keeps B a true
+    # batching dim of the HLO scatter/gather — indexing with an explicit
+    # arange(B) makes SPMD replicate the whole batch (measured: 8.8 TB of
+    # f32[B,S*k,d] all-reduces on the olmoe cell; EXPERIMENTS.md §Perf).
+    src = jnp.repeat(x.reshape(B, S, 1, d), k, axis=2).reshape(B, S * k, d)
+
+    def scatter_row(xb, fe, sl):
+        return jnp.zeros((E, C, d), x.dtype).at[fe, sl].add(xb, mode="drop")
+
+    buf = jax.vmap(scatter_row)(src, flat_e, slot)
+    # batch-sharded dispatch buffer (experts replicated; see rules.shard_experts)
+    buf = shard_experts(buf)
+
+    # expert FFN (swiglu), batched over experts
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", buf, p["w_up"]
+    )
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])  # [B,E,C,d]
+
+    # gather back and combine with gate weights
+    gath = _combine(out, flat_e, slot, keep.astype(out.dtype))
+    gath = gath * gate.reshape(B, S * k, 1).astype(gath.dtype)
+    y = jnp.sum(gath.reshape(B, S, k, d), axis=2)
+    return y, aux
+
+
+def moe_apply(cfg, x, p, group: int = MOE_SEQ_CHUNK):
+    """x [B, S, d] -> (y [B, S, d], aux fp32).  Scans over token groups."""
+    B, S, d = x.shape
+    if S <= group or S % group != 0:
+        return _moe_group(cfg, x, p)
+    ng = S // group
+    xg = jnp.moveaxis(x.reshape(B, ng, group, d), 1, 0)
+
+    def body(_, xc):
+        y, aux = _moe_group(cfg, xc, p)
+        return None, (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(body, None, xg)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, d), jnp.mean(auxs)

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing: x -> W_in -> depthwise conv(4) -> RG-LRU -> (* gelu gate) ->
+W_out.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a u_t),  i_t = sigmoid(W_x u_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+is a linear recurrence in h, so training/prefill use
+``jax.lax.associative_scan`` (log-depth, TPU-friendly) rather than a serial
+time scan; decode is the O(1) single-step update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def init_rglru(cfg, key, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dr = cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    std_in, std_out = 0.02, 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, dr)) * std_in).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, dr)) * std_in).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, dr)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": (jax.random.normal(ks[3], (dr, dr)) * std_in).astype(dtype),
+        "w_x": (jax.random.normal(ks[4], (dr, dr)) * std_in).astype(dtype),
+        "lam": jnp.full((dr,), 0.72, jnp.float32),  # a ~= 0.95^c at init
+        "w_out": (jax.random.normal(ks[5], (dr, d)) * std_out).astype(dtype),
+    }
+
+
+def _conv1d(u, w, b, cache=None):
+    B, S, ch = u.shape
+    pad = jnp.zeros((B, 3, ch), u.dtype) if cache is None else cache
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i : i + S, :] * w[i][None, None, :] for i in range(4))
+    return out + b[None, None, :], up[:, -3:, :]
+
+
+def _gates(u, p):
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None, :] * r  # [B,S,dr]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _combine(lhs, rhs):
+    a1, b1 = lhs
+    a2, b2 = rhs
+    return a1 * a2, a2 * b1 + b2
+
+
+def rglru_apply(cfg, x, p, h0=None, return_state=False, chunk=512):
+    """Full-sequence recurrent block. x [B,S,d] -> (y [B,S,d], state).
+
+    The linear recurrence runs associative-scan *within* chunks (log-depth,
+    TPU-friendly) and a sequential lax.scan *across* chunks: a monolithic
+    associative_scan over S materializes O(log S) level intermediates of
+    [B, S, dr] fp32 each for the backward pass, which at S=4096, dr=4096 is
+    tens of GB per layer; chunking bounds that to the chunk size while
+    keeping within-chunk parallelism.
+    """
+    B, S, _ = x.shape
+    u = x @ p["w_in"]
+    u, conv_cache = _conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(u, p)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+    dr = a.shape[-1]
+
+    if S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        ac = jnp.moveaxis(a.reshape(B, nc, chunk, dr), 1, 0)
+        bc = jnp.moveaxis(b.reshape(B, nc, chunk, dr), 1, 0)
+
+        def body(h_prev, inp):
+            ai, bi = inp
+            bi = bi.at[:, 0, :].add(ai[:, 0, :] * h_prev)
+            _, hi = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+            return hi[:, -1, :], hi
+
+        h_last, hs = jax.lax.scan(body, jnp.zeros((B, dr), jnp.float32), (ac, bc))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, dr)
+    else:
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        h_last = h[:, -1, :]
+
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    y = (h * gate).astype(x.dtype)
+    if return_state:
+        return y @ p["w_out"], {"h": h_last, "conv": conv_cache}
+    return y @ p["w_out"], h_last
+
+
+def rglru_decode_init(cfg, batch):
+    dr = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, 3, dr), jnp.bfloat16),
+    }
+
+
+def rglru_decode_step(cfg, x, p, state):
+    """x [B,1,d] -> (y [B,1,d], new_state)."""
+    u = x @ p["w_in"]
+    u, conv_cache = _conv1d(u, p["conv_w"], p["conv_b"], cache=state["conv"])
+    a, b = _gates(u, p)
+    h = a[:, 0] * state["h"] + b[:, 0]  # [B, dr]
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    y = (h[:, None, :] * gate).astype(x.dtype)
+    return y @ p["w_out"], {"h": h, "conv": conv_cache}

@@ -1,0 +1,178 @@
+"""Mamba-2: State Space Duality (SSD) mixer — chunked matmul form.
+
+The SSD algorithm (Dao & Gu, 2024) computes the selective-SSM recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,   y_t = C_t . h_t + D x_t
+
+as (i) an intra-chunk attention-like term through a decay-masked QQ^T-style
+matmul and (ii) an inter-chunk low-rank state hand-off — all matmuls, which
+is exactly what the TPU MXU wants (this is the hardware-adaptation story:
+SSD is already the TPU-native form of Mamba; no Pallas needed for the dry
+run, the chunked einsums map straight onto the systolic array).
+
+Layout follows the reference implementation: d_inner = expand * d_model,
+nheads = d_inner / headdim, one SSM group (G=1), state size N, depthwise
+conv width 4 on the (x, B, C) projections.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    headdim = 64
+    nheads = d_inner // headdim
+    return d_inner, headdim, nheads, cfg.ssm_state
+
+
+def init_ssm(cfg, key, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_inner, P, H, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C get the depthwise conv
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * 0.02).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": (
+            jax.random.normal(ks[3], (d_inner, d))
+            * 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+        ).astype(dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, P, H, N = ssm_dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _conv1d(xBC, w, b, cache=None):
+    """Depthwise causal conv, width 4.  cache: [B, 3, ch] previous inputs."""
+    B, S, ch = xBC.shape
+    if cache is None:
+        pad = jnp.zeros((B, 3, ch), xBC.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, xBC], axis=1)  # [B, S+3, ch]
+    out = sum(xp[:, i : i + S, :] * w[i][None, None, :] for i in range(4))
+    new_cache = xp[:, -3:, :]
+    return jax.nn.silu(out + b[None, None, :]), new_cache
+
+
+def _segsum(x):
+    """x [..., Q] -> [..., Q, Q]: sum_{i=s+1..l} x_i for l >= s, -inf above."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_apply(cfg, x, p, chunk=128, return_state=False):
+    """Full-sequence SSD. x [B, S, d] -> y [B, S, d] (+ decode state).
+
+    Sequences not divisible by ``chunk`` are right-padded; padded positions
+    get dt = 0 (softplus(-inf)) so they leave the SSM state untouched, and
+    the decode conv cache is taken from the true sequence end.
+    """
+    B, S_true, _ = x.shape
+    d_inner, P, H, N = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    pad = (-S_true) % chunk
+    xBC_raw = xBC
+    if pad:
+        xBC = jnp.pad(xBC, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e9)  # softplus -> 0: no-op steps
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+    S = S_true + pad
+    xBC, _ = _conv1d(xBC, p["conv_w"], p["conv_b"])
+    # decode conv cache must reflect the TRUE last 3 inputs, not padding
+    left = jnp.concatenate(
+        [jnp.zeros((B, 3, xBC_raw.shape[-1]), xBC_raw.dtype), xBC_raw], axis=1)
+    conv_cache = left[:, S_true : S_true + 3, :]
+    xs, B_, C_ = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    if pad:
+        dt = dt * (jnp.arange(S) < S_true)[None, :, None]
+    A = -jnp.exp(p["A_log"])  # [H]
+
+    nc = S // chunk
+    xc = xs.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    Bc = B_.reshape(B, nc, chunk, N).astype(jnp.float32)
+    Cc = C_.reshape(B, nc, chunk, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, chunk, H)
+    dA = dtc * A[None, None, None, :]  # [B,nc,Q,H]
+    dAcs = jnp.cumsum(dA, axis=2)
+
+    # (i) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))  # [B,nc,H,Q,Q]
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # [B,nc,Q,Q]
+    xdt = xc * dtc[..., None]  # [B,nc,Q,H,P]
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", CB, L, xdt)
+
+    # (ii) inter-chunk states
+    decay_end = jnp.exp(dAcs[:, :, -1:, :] - dAcs)  # [B,nc,Q,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_end, xdt)
+    chunk_decay = jnp.exp(dAcs[:, :, -1, :])  # [B,nc,H]
+
+    def hop(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the *incoming* state for each chunk
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, states_in = jax.lax.scan(
+        hop, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)  # [B,nc,H,P,N]
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, states_in, jnp.exp(dAcs))
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + xs.reshape(B, S, H, P).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype) @ p["out_proj"])[:, :S_true]
+    if return_state:
+        return out, {"ssm": final_state, "conv": conv_cache}
+    return out
+
+
+def ssd_decode_init(cfg, batch, dtype=jnp.float32):
+    d_inner, P, H, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, 3, conv_dim), jnp.bfloat16),
+    }
+
+
+def ssd_decode_step(cfg, x, p, state):
+    """Single token. x [B, 1, d] -> (y [B, 1, d], new state)."""
+    B = x.shape[0]
+    d_inner, P, H, N = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_cache = _conv1d(xBC, p["conv_w"], p["conv_b"], cache=state["conv"])
+    xs, B_, C_ = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # [B,H]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = B_[:, 0].astype(jnp.float32)  # [B,N]
+    Cv = C_[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bv)
+    ssm = state["ssm"] * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cv) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype) @ p["out_proj"], {"ssm": ssm, "conv": conv_cache}

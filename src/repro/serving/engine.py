@@ -1,0 +1,224 @@
+"""Continuous-batching serving engine on the versioned page pool.
+
+The OA story end-to-end (DESIGN.md §2):
+
+- **palloc**: KV storage is allocated once; freed pages stay readable.
+- **retire/free**: when a request finishes — or is PREEMPTED under memory
+  pressure — its pages are freed *optimistically*: versions bump and the
+  pages become allocatable immediately, without fencing against the decode
+  step that may still be reading them.
+- **optimistic access**: every step snapshots the versions of the pages it
+  will read before launch and validates after; on mismatch the step's
+  output for that sequence is discarded and the request restarts from its
+  last committed state (re-queued), exactly the OA read protocol.
+- **hazard pointers**: pages a step *writes* (the append slot) belong to
+  requests pinned in the running batch — the scheduler never frees those,
+  which is the structural analogue of protect-then-validate-then-CAS.
+
+Counters mirror the paper's: warnings fired (pool clock), reader restarts,
+preemptions, reclaimed pages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pagepool as pp
+from .paged_decode import kv_storage_init, paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    committed: int = 0  # tokens (prompt+generated) whose KV is committed
+    pages: list[int] = dataclasses.field(default_factory=list)
+    restarts: int = 0
+    state: str = "queued"  # queued | running | finished
+
+    @property
+    def target_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def next_token(self) -> int:
+        # the token whose KV this step commits (position == self.committed)
+        seq = self.prompt + self.generated
+        return seq[self.committed]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_committed: int = 0
+    preemptions: int = 0
+    reader_restarts: int = 0
+    warnings_fired: int = 0
+    pages_reclaimed: int = 0
+
+
+class PagedServingEngine:
+    def __init__(self, cfg, params, *, num_pages: int, page_size: int,
+                 max_batch: int = 8, max_pages_per_seq: int | None = None,
+                 attn_impl: str = "ref", greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_batch = max_batch
+        self.attn_impl = attn_impl
+        self.pool = pp.pool_init(num_pages)
+        self.kv = kv_storage_init(cfg, num_pages, page_size)
+        self.max_pages_per_seq = max_pages_per_seq or num_pages
+        self.queue: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.stats = EngineStats()
+        self.greedy = greedy
+
+    # -- page accounting --------------------------------------------------------
+
+    def _ensure_pages(self, req: Request, length_after: int) -> bool:
+        """Grow req's block table to cover ``length_after`` tokens; preempt
+        victims if the pool is exhausted.  False if req itself must wait."""
+        need = (length_after + self.page_size - 1) // self.page_size
+        while len(req.pages) < need:
+            self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
+            if bool(ok):
+                req.pages.append(int(pages[0]))
+                continue
+            victim = self._pick_victim(exclude=req)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _pick_victim(self, exclude: Request):
+        cands = [r for r in self.running if r is not exclude]
+        if not cands:
+            return None
+        # youngest first (least committed work lost), like scheduler LIFO
+        return min(cands, key=lambda r: r.committed)
+
+    def _preempt(self, victim: Request) -> None:
+        """OPTIMISTIC free: pages are reclaimed immediately — any in-flight
+        read of them will fail version validation and restart."""
+        self._release_pages(victim)
+        victim.state = "queued"
+        victim.committed = 0
+        victim.generated = []  # restart from a known-valid root (the prompt)
+        victim.restarts += 1
+        self.running.remove(victim)
+        self.queue.append(victim)
+        self.stats.preemptions += 1
+
+    def _release_pages(self, req: Request) -> None:
+        if req.pages:
+            arr = jnp.asarray(req.pages, jnp.int32)
+            self.pool = pp.free_pages(self.pool, arr)
+            self.stats.pages_reclaimed += len(req.pages)
+        req.pages = []
+
+    def _block_table(self, req: Request) -> np.ndarray:
+        bt = np.full((self.max_pages_per_seq,), -1, np.int32)
+        bt[: len(req.pages)] = req.pages
+        return bt
+
+    # -- scheduling -------------------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        req = Request(rid=len(self.queue) + len(self.running) + 1000,
+                      prompt=list(prompt), max_new_tokens=max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue[0]
+            need_total = (req.target_len + self.page_size - 1) // self.page_size
+            if need_total > min(self.num_pages, self.max_pages_per_seq):
+                raise MemoryError(
+                    f"request {req.rid} needs {need_total} pages; the pool "
+                    f"can never satisfy it (num_pages={self.num_pages})")
+            if not self._ensure_pages(req, req.committed + 1):
+                break
+            self.queue.popleft()
+            req.state = "running"
+            self.running.append(req)
+
+    # -- the decode loop ----------------------------------------------------------
+
+    def step(self, *, inject_preemption_of: Request | None = None) -> None:
+        """One batched decode step over all running requests.
+
+        ``inject_preemption_of`` frees that request's pages AFTER launch but
+        BEFORE validation — the OA race the version check must catch (used
+        by tests; in production the same interleaving happens when the
+        scheduler thread overlaps with device execution).
+        """
+        batch = list(self.running)
+        if not batch:
+            return
+        B = len(batch)
+        tokens = np.array([r.next_token for r in batch], np.int32)
+        lengths = np.array([r.committed for r in batch], np.int32)
+        for r in batch:
+            if r.state == "running" and not self._ensure_pages(r, r.committed + 1):
+                self._preempt(r)  # cannot grow and nothing to evict: requeue
+        tables = np.stack([self._block_table(r) for r in batch])
+        if not self.running:
+            return
+
+        # OA: snapshot versions of every page this step will read
+        pages_flat = jnp.asarray(tables, jnp.int32)
+        snapshot = pp.snapshot_versions(self.pool, pages_flat)
+
+        logits, self.kv = paged_decode_step(
+            self.params, self.kv, jnp.asarray(tables), jnp.asarray(lengths),
+            jnp.asarray(tokens), cfg=self.cfg, impl=self.attn_impl,
+        )
+
+        if inject_preemption_of is not None and inject_preemption_of in self.running:
+            self._preempt(inject_preemption_of)
+
+        # OA validation: discard results whose pages were reclaimed mid-flight
+        cur = pp.snapshot_versions(self.pool, pages_flat)
+        valid_rows = np.asarray(jnp.all(cur == snapshot, axis=1))
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+
+        for i, req in enumerate(batch):
+            if req.state != "running":
+                continue  # preempted mid-flight; its row is dead anyway
+            if not valid_rows[i]:
+                self.stats.reader_restarts += 1
+                self._preempt(req)  # restart from known-valid root
+                continue
+            req.committed += 1
+            self.stats.tokens_committed += 1
+            if req.committed >= len(req.prompt) and len(req.generated) < req.max_new_tokens:
+                req.generated.append(int(next_tokens[i]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.state = "finished"
+                self.running.remove(req)
+                self._release_pages(req)  # retire: fires the warning
+        self.stats.steps += 1
+        self.stats.warnings_fired = int(self.pool.clock)
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        t0 = time.time()
+        for _ in range(max_steps):
+            self._admit()
+            if not self.running and not self.queue:
+                break
+            if not self.running:  # queue blocked on memory: forced preemption failed
+                raise MemoryError("pool exhausted with empty running set")
+            self.step()
+        self.stats.wall_seconds = time.time() - t0  # type: ignore[attr-defined]
+        return self.stats

@@ -1,0 +1,67 @@
+"""Paged decode step for decoder-LM families.
+
+Same math as ``transformer.decoder_decode_step`` but the KV cache lives in
+the versioned page pool: storage [L, P, page, Hkv, D], one block table per
+sequence shared by all layers (vLLM layout).  Attention goes through
+``repro.kernels.ops.paged_attention`` (Pallas on TPU, oracle on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import paged_attention
+from repro.models.layers import apply_norm, attention_qkv, mlp_apply
+from repro.models.transformer import embed_tokens, unembed
+
+
+def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(1,))
+def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
+                      impl: str = "ref"):
+    """One token for every sequence.
+
+    kv: {'k','v': [L, P, page, Hkv, D]} (donated, updated in place);
+    block_tables [B, max_pages] int32; lengths [B] int32 (current length —
+    the new token lands at position ``lengths``); tokens [B] int32.
+    Returns (logits [B, vocab], kv).
+    """
+    assert cfg.family in ("dense", "moe", "vlm"), "paged decode: decoder LMs only"
+    B = tokens.shape[0]
+    page_size = kv["k"].shape[2]
+    x = embed_tokens(cfg, params["embed"], tokens[:, None], lengths[:, None])
+
+    page_idx = lengths // page_size
+    slot = lengths % page_size
+    pages = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    drop = kv["k"].shape[1]  # OOB page id -> dropped write
+    pidx = jnp.where(pages >= 0, pages, drop)
+
+    def layer(x, scanned):
+        blk, kl, vl = scanned  # kl/vl [P, page, Hkv, D]
+        h = apply_norm(cfg, x, blk["ln1"])
+        q, k, v = attention_qkv(cfg, h, blk["attn"], lengths[:, None])
+        kl = kl.at[pidx, slot].set(k[:, 0], mode="drop")
+        vl = vl.at[pidx, slot].set(v[:, 0], mode="drop")
+        att = paged_attention(q[:, 0], {"k": kl, "v": vl}, block_tables,
+                              lengths + 1, impl=impl)
+        x = x + att.reshape(B, 1, -1) @ blk["attn"]["wo"]
+        h2 = apply_norm(cfg, x, blk["ln2"])
+        if cfg.moe:
+            from repro.models.moe import moe_apply
+            y, _ = moe_apply(cfg, h2, blk["moe"])
+        else:
+            y = mlp_apply(cfg, h2, blk["mlp"])
+        return x + y, (kl, vl)
+
+    x, (ks, vs) = jax.lax.scan(layer, x, (params["blocks"], kv["k"], kv["v"]))
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x)[:, 0].astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,19 @@
+from .rules import (
+    param_specs,
+    opt_specs,
+    batch_specs,
+    cache_specs,
+    dp_axes_for,
+    constrain,
+    to_named,
+)
+
+__all__ = [
+    "param_specs",
+    "opt_specs",
+    "batch_specs",
+    "cache_specs",
+    "dp_axes_for",
+    "constrain",
+    "to_named",
+]

@@ -1,0 +1,280 @@
+"""Sharding rules: params (TP + FSDP/ZeRO), activations, caches, optimizer.
+
+Axis convention: mesh axes are ``('data','model')`` single-pod and
+``('pod','data','model')`` multi-pod.  'model' carries tensor/expert
+parallelism; ('pod','data') carry data parallelism and — for archs with
+``cfg.fsdp`` — fully-sharded parameter storage (per-layer all-gather emerges
+from scan + sharded stacked weights).  Optimizer moments additionally shard
+over the data axes even when params do not (ZeRO-1).
+
+Rules are name-based over the param pytree; anything unmatched falls back to
+replication (safe, never wrong, shows up in the roofline as memory waste —
+which is exactly where we want unhandled cases to surface).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+STACKED_CONTAINERS = ("blocks", "groups", "tail", "enc_blocks")
+
+# weights whose LAST dim is the "output" (column-parallel; shard out over model)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "in_proj", "w_a", "w_x",
+        "bq", "bk", "bv", "b_up"}
+# weights whose FIRST (non-stacked) dim is the contracted "input" (row-parallel)
+_ROW = {"wo", "w_down", "w_out", "out_proj"}
+_REPLICATED = {"scale", "bias", "lam", "A_log", "D", "dt_bias", "conv_b",
+               "b_down", "w_router", "pos", "enc_pos"}
+
+
+def dp_axes_for(batch: int, mesh) -> tuple[str, ...]:
+    """Data-parallel axes that evenly divide this batch (possibly none)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if axes and batch % n == 0:
+        return axes
+    if "data" in mesh.shape and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def _fsdp_axes(cfg, mesh):
+    if not cfg.fsdp:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n, mesh, axes):
+    if not axes:
+        return False
+    return n % math.prod(mesh.shape[a] for a in axes) == 0
+
+
+def param_specs(cfg, params_tree, mesh, *, serving: bool = False):
+    """``serving=True`` disables FSDP: a fully-sharded layout re-gathers the
+    full weight set EVERY decode step (measured 12 GB/step/device on the
+    qwen2-72b decode cell — 0.24 s of ICI time for an 11 ms memory-bound
+    step).  Decode wants TP-resident weights; training wants FSDP."""
+    tp = mesh.shape["model"]
+    fsdp = () if serving else _fsdp_axes(cfg, mesh)
+
+    def assign(path, leaf):
+        names = [str(p.key) for p in path if isinstance(p, DictKey)]
+        name = names[-1]
+        stacked = 1 if names[0] in STACKED_CONTAINERS else 0
+        dims = list(leaf.shape[stacked:])
+        spec = [None] * len(dims)
+        is_moe = "moe" in names and name in ("w_gate", "w_up", "w_down")
+
+        if is_moe:  # [E, d, ff] / [E, ff, d]
+            mode = os.environ.get("REPRO_MOE_SHARD", "tp")
+            daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            if mode == "ep" and dims[0] % tp == 0:
+                spec[0] = "model"  # expert parallelism
+            elif mode == "data" and daxes and _div(dims[0], mesh, daxes):
+                spec[0] = daxes  # ZeRO-style storage, AG per layer
+            elif mode == "tp":
+                hid = 2 if name != "w_down" else 1
+                if dims[hid] % tp == 0:
+                    spec[hid] = "model"
+            # mode == "none": replicated
+        elif name == "tok":
+            # [V, d].  NEVER shard the indexed dim V — that turns the token
+            # gather into an SPMD "involuntary full rematerialization"
+            # (measured 10x collective blowup on the olmoe cell).  Sharding
+            # d is safe (the gather never touches it):
+            # - untied archs: d over the data axes — local lookup, sharded
+            #   storage and gradients (qwen's replicated f32 table+grad cost
+            #   ~14 GiB of temp otherwise);
+            # - tied archs: replicated, so the unembed x @ tok.T stays local
+            #   (d-sharding it would psum full-vocab logit chunks).
+            daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            if not cfg.tie_embeddings and daxes and _div(dims[1], mesh, daxes):
+                spec[1] = daxes
+        elif name == "lm_head":  # [d, V]
+            if dims[1] % tp == 0:
+                spec[1] = "model"
+            if _div(dims[0], mesh, fsdp):
+                spec[0] = fsdp
+        elif name in _REPLICATED or len(dims) == 0:
+            pass
+        elif name == "conv_w":  # [4, ch] depthwise
+            if dims[1] % tp == 0:
+                spec[1] = "model"
+        elif name in _COL:
+            if dims[-1] % tp == 0:
+                spec[-1] = "model"
+            if len(dims) >= 2 and _div(dims[-2], mesh, fsdp):
+                spec[-2] = fsdp
+        elif name in _ROW:
+            if dims[0] % tp == 0:
+                spec[0] = "model"
+            if len(dims) >= 2 and _div(dims[-1], mesh, fsdp):
+                spec[-1] = fsdp
+        else:  # unmatched: replicate (visible in roofline, never wrong)
+            pass
+
+        return P(*([None] * stacked + spec))
+
+    return tree_map_with_path(assign, params_tree)
+
+
+def opt_specs(cfg, params_tree, mesh):
+    """ZeRO-1: moments take the param spec, then shard the largest
+    still-unsharded dim over the data axes."""
+    pspecs = param_specs(cfg, params_tree, mesh)
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dn = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
+
+    def extend(leaf, spec):
+        parts = list(spec)
+        if daxes and not any(p == daxes or p == "data" or (isinstance(p, tuple) and set(p) & set(daxes)) for p in parts):
+            # find largest unsharded dim divisible by the data-axis product
+            order = sorted(range(len(parts)), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if parts[i] is None and leaf.shape[i] % dn == 0:
+                    parts[i] = daxes
+                    break
+        return P(*parts)
+
+    moments = jax.tree.map(extend, params_tree, pspecs)
+    return {"m": moments, "v": moments, "step": P()}
+
+
+def batch_specs(cfg, batch_tree, mesh):
+    def assign(path, leaf):
+        dp = dp_axes_for(leaf.shape[0], mesh)
+        spec = [dp if dp else None] + [None] * (len(leaf.shape) - 1)
+        return P(*spec)
+
+    return tree_map_with_path(assign, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, mesh):
+    tp = mesh.shape["model"]
+
+    def assign(path, leaf):
+        names = [str(p.key) for p in path if isinstance(p, DictKey)]
+        name = names[-1]
+        if name == "len":
+            dp = dp_axes_for(leaf.shape[0], mesh)
+            return P(dp if dp else None)
+        # all other caches are [L/G, B, ...]
+        dp = dp_axes_for(leaf.shape[1], mesh)
+        spec = [None, dp if dp else None] + [None] * (len(leaf.shape) - 2)
+        if name in ("k", "v"):  # [L,B,S,Hkv,Dh]: sequence-parallel KV
+            if leaf.shape[2] % tp == 0:
+                spec[2] = "model"
+        elif name == "ssm":  # [L,B,H,P,N]: heads over model
+            if leaf.shape[2] % tp == 0:
+                spec[2] = "model"
+        elif name in ("h1", "h2", "th"):  # [G,B,dr]
+            if leaf.shape[2] % tp == 0:
+                spec[2] = "model"
+        elif name in ("conv1", "conv2", "tconv", "conv"):  # [G,B,3,ch]
+            if leaf.shape[3] % tp == 0:
+                spec[3] = "model"
+        elif name in ("ck", "cv"):  # cross-KV: encoder_seq rarely divides; replicate
+            pass
+        return P(*spec)
+
+    return tree_map_with_path(assign, cache_tree)
+
+
+def constrain(x, *spec):
+    """Best-effort with_sharding_constraint: silently a no-op when no mesh is
+    active (CPU unit tests) or the spec does not divide."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def shard_seq(x, batch_axis: int = 0, seq_axis: int = 1):
+    """Sequence-parallel constraint on the residual stream [B, S, d]:
+    batch over the data axes, sequence over 'model' (Megatron-SP).  The
+    per-layer checkpointed activations then store 1/tp of the bytes and the
+    TP all-reduces split into reduce-scatter + all-gather pairs.
+
+    No-op outside a mesh context or when dims do not divide — safe to call
+    unconditionally from model code.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return x
+        spec = [None] * x.ndim
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dn = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
+        if daxes and x.shape[batch_axis] % dn == 0:
+            spec[batch_axis] = daxes
+        if x.shape[seq_axis] % mesh.shape["model"] == 0:
+            spec[seq_axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def shard_logits(x, batch_axis: int = 0, vocab_axis: int = -1):
+    """Vocab-shard loss-chunk logits [B, chunk, V] over 'model'.
+
+    For tied-embedding archs the table is replicated (see the `tok` rule),
+    so without this constraint every shard materializes FULL-vocab fp32
+    logit chunks — 17 GiB per chunk at V=257k (paligemma).  Constraining the
+    matmul output makes each shard compute only its vocab column slice."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return x
+        if x.shape[vocab_axis] % mesh.shape["model"] != 0:
+            return x
+        spec = [None] * x.ndim
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dn = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
+        if daxes and x.shape[batch_axis] % dn == 0:
+            spec[batch_axis] = daxes
+        spec[vocab_axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def shard_experts(x, expert_axis: int = 1, batch_axis: int = 0):
+    """Constraint for MoE dispatch buffers [B, E, C, d]: batch over the data
+    axes, experts REPLICATED.
+
+    Measured on the olmoe train cell (EXPERIMENTS.md §Perf): leaving the
+    buffer unconstrained lets w_gate's expert sharding propagate in and
+    replicate the batch dim (16x memory); constraining experts to 'model'
+    (true EP) turns the dispatch scatter into an SPMD pathology (~17 TB of
+    collectives).  Batch-sharded buffers + per-layer expert-weight
+    all-gather is the configuration that is both local and bounded."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return x
+        spec = [None] * x.ndim
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dn = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
+        if daxes and x.shape[batch_axis] % dn == 0:
+            spec[batch_axis] = daxes
+        if (os.environ.get("REPRO_MOE_SHARD", "tp") == "ep"
+                and x.shape[expert_axis] % mesh.shape["model"] == 0):
+            spec[expert_axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,6 @@
+import os
+
+# Tests must see the real single-device CPU environment; the 512-device
+# override belongs ONLY to the dry-run entrypoint (repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")

@@ -1,0 +1,198 @@
+"""LRMalloc unit tests: size classes, lifecycle, palloc persistence, VM."""
+
+import pytest
+
+from repro.core import (
+    EMPTY, FULL, PARTIAL, LRMalloc, MAX_SZ, PAGE_SIZE, ReleaseStrategy,
+    SIZE_CLASSES, class_block_size, size_to_class,
+)
+
+
+def make(strategy=ReleaseStrategy.MADVISE, nsb=64):
+    return LRMalloc(num_superblocks=nsb, superblock_size=64 * 1024,
+                    strategy=strategy)
+
+
+def test_size_classes_monotone_and_cover():
+    assert SIZE_CLASSES[0] == 16 and SIZE_CLASSES[-1] == MAX_SZ
+    assert list(SIZE_CLASSES) == sorted(set(SIZE_CLASSES))
+    for req in (1, 15, 16, 17, 100, 1024, 1500, MAX_SZ):
+        ci = size_to_class(req)
+        assert class_block_size(ci) >= req
+        if ci:
+            assert class_block_size(ci - 1) < req
+
+
+def test_size_class_rejects_large():
+    with pytest.raises(ValueError):
+        size_to_class(MAX_SZ + 1)
+
+
+def test_malloc_free_roundtrip_unique_offsets():
+    a = make()
+    ptrs = [a.malloc(48) for _ in range(1000)]
+    assert len(set(ptrs)) == 1000
+    assert all(p % 16 == 0 and 0 < p < a.arena.total for p in ptrs)
+    for p in ptrs:
+        a.write_u64(p, p)
+    for p in ptrs:
+        assert a.read_u64(p) == p  # no overlap
+        a.free(p)
+    a.close()
+
+
+def test_reuse_after_free():
+    a = make()
+    p1 = a.malloc(64)
+    a.free(p1)
+    p2 = a.malloc(64)
+    assert p2 == p1  # LIFO thread cache
+    a.close()
+
+
+def test_offset_zero_reserved():
+    a = make()
+    ptrs = [a.malloc(16) for _ in range(5000)]
+    assert 0 not in ptrs
+    a.close()
+
+
+def test_distinct_size_classes_dont_collide():
+    a = make()
+    small = [a.malloc(16) for _ in range(100)]
+    big = [a.malloc(8192) for _ in range(20)]
+    for p in small:
+        a.write_u64(p, 1)
+    for p in big:
+        a.write_u64(p, 2)
+    assert all(a.read_u64(p) == 1 for p in small)
+    a.close()
+
+
+def test_palloc_rejects_large():
+    a = make()
+    with pytest.raises(ValueError):
+        a.palloc(MAX_SZ + 1)
+    a.close()
+
+
+def test_large_allocation_path():
+    a = make()
+    p = a.malloc(MAX_SZ + 1)
+    assert p >= a.arena.total  # synthetic large-alloc key space
+    assert a.stats.large_allocs == 1
+    a.free(p)
+    a.close()
+
+
+@pytest.mark.parametrize("strategy", list(ReleaseStrategy))
+def test_persistent_release_keeps_ranges_readable(strategy):
+    a = make(strategy, nsb=128)
+    ptrs = [a.palloc(1024) for _ in range(2000)]
+    for p in ptrs:
+        a.write_u64(p, p)
+    for p in ptrs:
+        a.free(p)
+    a.flush_all_caches()
+    assert a.stats.persistent_released > 0
+    # the OA contract: every freed address remains readable
+    for p in ptrs[::37]:
+        a.read_u64(p)
+    # and the virtual ranges get recycled for new allocations
+    p2 = [a.palloc(1024) for _ in range(500)]
+    for p in p2:
+        a.write_u64(p, 7)
+    assert a.stats.superblocks_reused_mapped > 0
+    a.close()
+
+
+@pytest.mark.parametrize("strategy",
+                         [ReleaseStrategy.MADVISE, ReleaseStrategy.SHARED_REMAP])
+def test_frames_actually_released(strategy):
+    a = make(strategy, nsb=128)
+    ptrs = [a.palloc(1024) for _ in range(3000)]
+    for p in ptrs:
+        a.write_u64(p, 1)
+    before = a.resident_bytes()
+    for p in ptrs:
+        a.free(p)
+    a.flush_all_caches()
+    after = a.resident_bytes()
+    assert after < before * 0.2, (before, after)
+    a.close()
+
+
+def test_keep_strategy_retains_frames():
+    a = make(ReleaseStrategy.KEEP, nsb=128)
+    ptrs = [a.palloc(1024) for _ in range(3000)]
+    for p in ptrs:
+        a.write_u64(p, 1)
+    before = a.resident_bytes()
+    for p in ptrs:
+        a.free(p)
+    a.flush_all_caches()
+    assert a.resident_bytes() >= before * 0.9
+    a.close()
+
+
+def test_superblock_state_machine():
+    a = make()
+    sc = size_to_class(64)
+    ptrs = [a.malloc(64) for _ in range(a.sb_size // 64 + 10)]
+    base = ptrs[0] - ptrs[0] % a.sb_size
+    desc = a.pagemap[base]
+    assert desc.anchor.load()[0] in (FULL, PARTIAL)
+    for p in ptrs:
+        a.free(p)
+    a.flush_all_caches()
+    # all blocks returned: the superblock must have cycled to EMPTY and been
+    # retired (removed from pagemap) or gone back PARTIAL via recycling
+    assert base not in a.pagemap or a.pagemap[base].anchor.load()[0] != FULL
+    a.close()
+
+
+def test_dwcas_leak_madvise_but_not_shared_remap():
+    """Paper §3.2: optimistic DWCAS (VBR) on reclaimed memory CoW-faults
+    frames back in under MADV_DONTNEED but lands on the one shared frame
+    under the shared mapping."""
+    leaks = {}
+    for strategy in (ReleaseStrategy.MADVISE, ReleaseStrategy.SHARED_REMAP):
+        a = make(strategy, nsb=128)
+        ptrs = [a.palloc(1024) for _ in range(2000)]
+        for p in ptrs:
+            a.write_u64(p, p)
+        for p in ptrs:
+            a.free(p)
+        a.flush_all_caches()
+        before = a.resident_bytes()
+        for p in ptrs:
+            assert not a.arena.cas_u64_hw(p, 0xDEAD, 0xBEEF)
+        leaks[strategy] = a.resident_bytes() - before
+        a.close()
+    assert leaks[ReleaseStrategy.MADVISE] > 20 * leaks[ReleaseStrategy.SHARED_REMAP] + 1
+
+
+def test_rss_goes_haywire_under_shared_remap_but_pss_does_not():
+    """The paper's own aside: Linux RSS counts the single shared frame once
+    per dead-superblock mapping; PSS reports the physical truth."""
+    a = make(ReleaseStrategy.SHARED_REMAP, nsb=128)
+    ptrs = [a.palloc(1024) for _ in range(3000)]
+    for p in ptrs:
+        a.write_u64(p, 1)
+    for p in ptrs:
+        a.free(p)
+    a.flush_all_caches()
+    # dirty the shared frame through many mappings (DWCAS write-intent)
+    for p in ptrs[:: 16]:
+        a.arena.cas_u64_hw(p, 1, 2)
+    pss = a.arena.resident_pages()
+    rss = a.arena.resident_rss_pages()
+    assert rss > 3 * pss  # haywire: one frame, many mappings
+    a.close()
+
+
+def test_arena_exhaustion_raises():
+    a = LRMalloc(num_superblocks=2, superblock_size=64 * 1024)
+    with pytest.raises(MemoryError):
+        [a.malloc(16 * 1024) for _ in range(100)]
+    a.close()

@@ -1,0 +1,50 @@
+"""Optimizer unit tests."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1e-2, clip_norm=1.0, warmup_steps=1)
+    params = {"x": jnp.zeros(3)}
+    state = adamw_init(params)
+    huge = {"x": jnp.full(3, 1e9)}
+    p2, state, info = adamw_update(cfg, params, huge, state)
+    assert float(info["grad_norm"]) > 1e8
+    assert float(jnp.max(jnp.abs(p2["x"]))) < 1.0  # update stayed bounded
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, 0)) == 0.0
+    assert abs(float(cosine_schedule(cfg, 10)) - 1.0) < 1e-6
+    assert float(cosine_schedule(cfg, 100)) < 1e-6
+    assert float(cosine_schedule(cfg, 50)) < 1.0
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_bf16_params_keep_dtype():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params)
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, state, _ = adamw_update(cfg, params, g, state)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert state["m"]["w"].dtype == jnp.float32  # moments stay fp32

@@ -1,0 +1,107 @@
+"""Device page pool: OA invariants, unit + hypothesis property tests."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import pagepool as pp
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def test_alloc_unique_and_exhaustion():
+    pool = pp.pool_init(8)
+    pool, a, ok1 = pp.alloc_pages(pool, 5)
+    pool, b, ok2 = pp.alloc_pages(pool, 3)
+    assert bool(ok1) and bool(ok2)
+    ids = np.concatenate([np.asarray(a), np.asarray(b)])
+    assert len(set(ids.tolist())) == 8
+    pool, c, ok3 = pp.alloc_pages(pool, 1)
+    assert not bool(ok3) and int(c[0]) == -1
+    assert int(pool.free_top) == 0
+
+
+def test_free_bumps_version_and_clock():
+    pool = pp.pool_init(8)
+    pool, pages, _ = pp.alloc_pages(pool, 4)
+    snap = pp.snapshot_versions(pool, pages)
+    assert bool(pp.validate_read(pool, pages, snap))
+    clock0 = int(pool.clock)
+    pool = pp.free_pages(pool, pages)
+    assert int(pool.clock) == clock0 + 1  # one warning per batch (Alg. 1)
+    assert not bool(pp.validate_read(pool, pages, snap))
+
+
+def test_free_ignores_unmapped_entries():
+    pool = pp.pool_init(8)
+    pool, pages, _ = pp.alloc_pages(pool, 2)
+    padded = jnp.concatenate([pages, jnp.full((3,), -1, jnp.int32)])
+    pool = pp.free_pages(pool, padded)
+    assert int(pool.free_top) == 8
+
+
+def test_stale_read_detected_after_reuse():
+    """The ABA case OA exists for: page freed AND reallocated — the old
+    snapshot must still fail validation."""
+    pool = pp.pool_init(4)
+    pool, pages, _ = pp.alloc_pages(pool, 2)
+    snap = pp.snapshot_versions(pool, pages)
+    pool = pp.free_pages(pool, pages)
+    pool, again, _ = pp.alloc_pages(pool, 2)  # same physical pages (LIFO)
+    assert set(np.asarray(again).tolist()) == set(np.asarray(pages).tolist())
+    assert not bool(pp.validate_read(pool, pages, snap))
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_pool_never_double_allocates(data):
+    npages = data.draw(st.integers(4, 32))
+    pool = pp.pool_init(npages)
+    live: set[int] = set()
+    for _ in range(data.draw(st.integers(1, 40))):
+        if data.draw(st.booleans()) and live:
+            k = data.draw(st.integers(1, len(live)))
+            batch = [live.pop() for _ in range(k)]
+            pool = pp.free_pages(pool, jnp.asarray(batch, jnp.int32))
+        else:
+            k = data.draw(st.integers(1, npages))
+            pool, pages, ok = pp.alloc_pages(pool, k)
+            got = [int(p) for p in np.asarray(pages) if p >= 0]
+            if bool(ok):
+                assert len(got) == k
+                assert not (set(got) & live), "double allocation"
+                live.update(got)
+            else:
+                assert not got
+    assert int(pool.free_top) == npages - len(live)
+
+
+@given(nfree=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_versions_monotone(nfree):
+    pool = pp.pool_init(8)
+    pool, pages, _ = pp.alloc_pages(pool, 8)
+    v0 = np.asarray(pp.snapshot_versions(pool, pages))
+    for _ in range(nfree):
+        pool = pp.free_pages(pool, pages[:2])
+        pool, pages2, _ = pp.alloc_pages(pool, 2)
+    v1 = np.asarray(pp.snapshot_versions(pool, pages))
+    assert (v1 >= v0).all()
+    assert (v1[:2] > v0[:2]).all()
+
+
+def test_append_and_gather_roundtrip():
+    kv = pp.kv_pages_init(8, 4, 2, 8, dtype=jnp.float32)
+    bt = jnp.array([[2, 5, -1, -1]], jnp.int32)
+    lengths = jnp.array([0], jnp.int32)
+    import jax
+    for t in range(6):
+        k = jnp.full((1, 2, 8), float(t + 1))
+        v = jnp.full((1, 2, 8), float(-(t + 1)))
+        kv = pp.append_kv(kv, bt, lengths, k, v)
+        lengths = lengths + 1
+    kf, vf = pp.gather_kv(kv, bt[0], 8)
+    got = np.asarray(kf[:, 0, 0])
+    assert got[:6].tolist() == [1, 2, 3, 4, 5, 6]

@@ -1,0 +1,60 @@
+"""Ring-buffer KV cache correctness: the subtle paths.
+
+- `_ring_align`: prefill packs the last-W window into ring slots
+  (slot = pos % W) including the misaligned case S % W != 0;
+- decode ring wrap: for sliding-window archs at positions far past the
+  window, the rolling cache must reproduce dense windowed attention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models.transformer import _ring_align, unembed
+
+
+def test_ring_align_slot_invariant():
+    """After _ring_align, entry at ring slot (p % W) equals position p of
+    the original sequence, for aligned and misaligned S."""
+    W = 8
+    for S in (4, 8, 11, 16, 19, 24):
+        kv = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1, 1)
+        ring = _ring_align(kv, W)
+        assert ring.shape[1] == W
+        lo = max(0, S - W)
+        for p in range(lo, S):
+            got = float(ring[0, p % W, 0, 0])
+            assert got == float(p), (S, p, got)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-9b", "mixtral-8x7b"])
+def test_prefill_decode_continuation_misaligned_window(arch):
+    """Prefill length NOT a multiple of the window, then decode across the
+    ring boundary: logits must keep matching teacher forcing."""
+    cfg = reduced(get_config(arch))
+    # reduced configs: window 16
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 44  # prefill 19 tokens (19 % 16 != 0), decode through 2 wraps
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab,
+                              jnp.int32)
+    hidden, _ = m.forward(params, {"tokens": toks})
+    tf_logits = unembed(cfg, params, hidden).astype(jnp.float32)
+
+    split = 19
+    cache, plog = jax.jit(lambda p, b: m.prefill(p, b, 16))(
+        params, {"tokens": toks[:, :split]})
+    np.testing.assert_allclose(np.asarray(plog[:, -1]),
+                               np.asarray(tf_logits[:, split - 1]),
+                               atol=5e-2, rtol=5e-2)
+    step = jax.jit(m.decode_step)
+    for pos in range(split, S):
+        logits, cache = step(params, cache,
+                             {"token": toks[:, pos],
+                              "pos": jnp.full((B,), pos, jnp.int32)})
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(tf_logits[:, pos]),
+            atol=5e-2, rtol=5e-2, err_msg=f"{arch} pos={pos}")
