@@ -1,0 +1,190 @@
+"""The PRE-PR serving engine, vendored verbatim as the perf baseline for
+``benchmarks/decode_throughput.py``.
+
+This is the host-sync-heavy hot path the sync-free engine replaced: per-page
+``bool(ok)`` round trips in ``_ensure_pages``, per-step ``np.stack`` block
+table rebuilds and re-uploads, two version-snapshot dispatches per step, and
+a logits [B, vocab] download — O(pages) host transfers per decode step.
+It stays bit-compatible with the new engine (same greedy decode), so the
+throughput ratio isolates the hot-path change.  Do not use it for anything
+but benchmarking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pagepool as pp
+from repro.serving.paged_decode import kv_storage_init, paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    committed: int = 0
+    pages: list[int] = dataclasses.field(default_factory=list)
+    restarts: int = 0
+    state: str = "queued"
+
+    @property
+    def target_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def next_token(self) -> int:
+        seq = self.prompt + self.generated
+        return seq[self.committed]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_committed: int = 0
+    preemptions: int = 0
+    reader_restarts: int = 0
+    warnings_fired: int = 0
+    pages_reclaimed: int = 0
+    wall_seconds: float = 0.0
+
+
+class LegacyPagedServingEngine:
+    def __init__(self, cfg, params, *, num_pages: int, page_size: int,
+                 max_batch: int = 8, max_pages_per_seq: int | None = None,
+                 attn_impl: str = "ref", greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_batch = max_batch
+        self.attn_impl = attn_impl
+        self.pool = pp.pool_init(num_pages)
+        self.kv = kv_storage_init(cfg, num_pages, page_size)
+        self.max_pages_per_seq = max_pages_per_seq or num_pages
+        self.queue: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.stats = EngineStats()
+        self.greedy = greedy
+
+    def _ensure_pages(self, req: Request, length_after: int) -> bool:
+        need = (length_after + self.page_size - 1) // self.page_size
+        while len(req.pages) < need:
+            self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
+            if bool(ok):  # <-- per-page host sync
+                req.pages.append(int(pages[0]))  # <-- and another
+                continue
+            victim = self._pick_victim(exclude=req)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _pick_victim(self, exclude: Request):
+        cands = [r for r in self.running if r is not exclude]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: r.committed)
+
+    def _preempt(self, victim: Request) -> None:
+        self._release_pages(victim)
+        victim.state = "queued"
+        victim.committed = 0
+        victim.generated = []
+        victim.restarts += 1
+        self.running.remove(victim)
+        self.queue.append(victim)
+        self.stats.preemptions += 1
+
+    def _release_pages(self, req: Request) -> None:
+        if req.pages:
+            arr = jnp.asarray(req.pages, jnp.int32)
+            self.pool = pp.free_pages(self.pool, arr)
+            self.stats.pages_reclaimed += len(req.pages)
+        req.pages = []
+
+    def _block_table(self, req: Request) -> np.ndarray:
+        bt = np.full((self.max_pages_per_seq,), -1, np.int32)
+        bt[: len(req.pages)] = req.pages
+        return bt
+
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        req = Request(rid=len(self.queue) + len(self.running) + 1000,
+                      prompt=list(prompt), max_new_tokens=max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue[0]
+            need_total = (req.target_len + self.page_size - 1) // self.page_size
+            if need_total > min(self.num_pages, self.max_pages_per_seq):
+                raise MemoryError(
+                    f"request {req.rid} needs {need_total} pages; the pool "
+                    f"can never satisfy it (num_pages={self.num_pages})")
+            if not self._ensure_pages(req, req.committed + 1):
+                break
+            self.queue.popleft()
+            req.state = "running"
+            self.running.append(req)
+
+    def step(self) -> None:
+        batch = list(self.running)
+        if not batch:
+            return
+        tokens = np.array([r.next_token for r in batch], np.int32)
+        lengths = np.array([r.committed for r in batch], np.int32)
+        for r in batch:
+            if r.state == "running" and not self._ensure_pages(r, r.committed + 1):
+                self._preempt(r)
+        tables = np.stack([self._block_table(r) for r in batch])  # rebuild + upload
+        if not self.running:
+            return
+
+        pages_flat = jnp.asarray(tables, jnp.int32)
+        snapshot = pp.snapshot_versions(self.pool, pages_flat)
+
+        logits, self.kv = paged_decode_step(
+            self.params, self.kv, jnp.asarray(tables), jnp.asarray(lengths),
+            jnp.asarray(tokens), cfg=self.cfg, impl=self.attn_impl,
+        )
+
+        cur = pp.snapshot_versions(self.pool, pages_flat)
+        valid_rows = np.asarray(jnp.all(cur == snapshot, axis=1))  # sync
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))  # sync
+
+        for i, req in enumerate(batch):
+            if req.state != "running":
+                continue
+            if not valid_rows[i]:
+                self.stats.reader_restarts += 1
+                self._preempt(req)
+                continue
+            req.committed += 1
+            self.stats.tokens_committed += 1
+            if req.committed >= len(req.prompt) and len(req.generated) < req.max_new_tokens:
+                req.generated.append(int(next_tokens[i]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.state = "finished"
+                self.running.remove(req)
+                self._release_pages(req)
+        self.stats.steps += 1
+        self.stats.warnings_fired = int(self.pool.clock)  # sync
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        t0 = time.time()
+        for _ in range(max_steps):
+            self._admit()
+            if not self.running and not self.queue:
+                break
+            if not self.running:
+                raise MemoryError("pool exhausted with empty running set")
+            self.step()
+        self.stats.wall_seconds = time.time() - t0
+        return self.stats

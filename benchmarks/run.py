@@ -13,7 +13,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.paper_scale
 
-    from . import hash_table, linked_list, memory_release, paged_attention_bench
+    from . import (decode_throughput, hash_table, linked_list, memory_release,
+                   paged_attention_bench)
 
     all_rows = []
     for mod, label in (
@@ -21,6 +22,7 @@ def main() -> None:
         (hash_table, "fig5_fig6_hash_table"),
         (memory_release, "fig3_memory_release"),
         (paged_attention_bench, "device_paged_attention"),
+        (decode_throughput, "decode_throughput"),
     ):
         print(f"# {label}", flush=True)
         rows = mod.run(quick=quick)
@@ -69,6 +71,15 @@ def main() -> None:
         print(f"check,dwcas leak: madvise leaks ({dw['madvise']['leaked_kib']}KiB) "
               f"but shared_remap does not ({dw['shared_remap']['leaked_kib']}KiB),"
               f"{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+
+    sp = [r for r in all_rows
+          if r["bench"] == "decode_throughput" and r["method"] == "speedup"]
+    if sp:
+        x = sp[0]["speedup_x"]
+        passed = x >= 1.5
+        print(f"check,decode_throughput: sync-free engine >=1.5x legacy "
+              f"(got {x}x),{'PASS' if passed else 'FAIL'}")
         ok &= passed
 
     mr = [r for r in all_rows if r["bench"] == "memory_release"]

@@ -50,6 +50,43 @@ def pool_init(num_pages: int) -> PagePool:
     )
 
 
+def _alloc_pages_batch_impl(pool: PagePool, need: jax.Array, max_grow: int):
+    """Traceable body of :func:`alloc_pages_batch` (reused inside fused jits)."""
+    need = jnp.clip(need.astype(jnp.int32), 0, max_grow)
+    end = jnp.cumsum(need)  # [B]
+    start = end - need
+    # prefix satisfaction: a row is granted iff every row before it (in batch
+    # order) was, and its own grant still fits.  Because ``end`` is monotone,
+    # once the pool runs dry every later needy row fails too — so a single
+    # pass assigns a contiguous run of popped pages.
+    sat = end <= pool.free_top
+    ok = jnp.all(sat | (need == 0))
+    j = jnp.arange(max_grow, dtype=jnp.int32)[None, :]
+    take = (j < need[:, None]) & sat[:, None]
+    idx = pool.free_top - 1 - (start[:, None] + j)
+    grants = jnp.where(
+        take & (idx >= 0), pool.free_stack[jnp.maximum(idx, 0)], -1
+    ).astype(jnp.int32)
+    granted = jnp.sum(jnp.where(sat, need, 0))
+    return pool._replace(free_top=pool.free_top - granted), grants, ok
+
+
+@functools.partial(jax.jit, static_argnums=2, donate_argnums=0)
+def alloc_pages_batch(pool: PagePool, need: jax.Array, max_grow: int = 1):
+    """Grant pages for an entire batch's growth in ONE fused call.
+
+    ``need`` [B] int32 — pages wanted per request this step (clipped to
+    ``max_grow``).  Returns (pool, grants [B, max_grow] int32 (−1 = not
+    granted), ok).  Grants are assigned greedily in batch order; on
+    exhaustion the satisfied prefix KEEPS its pages (so the batch still makes
+    progress) and ``ok`` is False so the scheduler can reclaim (preempt a
+    victim) before the unsatisfied rows retry.  This replaces the per-page
+    ``alloc_pages(pool, 1)`` + ``bool(ok)`` host round-trip loop: one jitted
+    dispatch, zero host syncs, for the whole batch.
+    """
+    return _alloc_pages_batch_impl(pool, need, max_grow)
+
+
 @functools.partial(jax.jit, static_argnums=1, donate_argnums=0)
 def alloc_pages(pool: PagePool, n: int):
     """Pop ``n`` pages.  Returns (pool, pages [n] int32, ok).
@@ -68,11 +105,8 @@ def alloc_pages(pool: PagePool, n: int):
     return pool._replace(free_top=new_top), pages, ok
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
-    """Push pages (−1 entries ignored) and fire the warning: each page's
-    version bumps and the global clock ticks once per batch (one warning per
-    reclamation batch — Alg. 1/2's single barrier)."""
+def _free_pages_impl(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Traceable body of :func:`free_pages` (reused inside fused jits)."""
     valid = pages >= 0
     npages = pool.free_stack.shape[0]
     pos = pool.free_top + jnp.cumsum(valid.astype(jnp.int32)) - 1
@@ -88,10 +122,42 @@ def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
     )
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Push pages (−1 entries ignored) and fire the warning: each page's
+    version bumps and the global clock ticks once per batch (one warning per
+    reclamation batch — Alg. 1/2's single barrier)."""
+    return _free_pages_impl(pool, pages)
+
+
+def _snapshot_impl(pool: PagePool, pages: jax.Array) -> jax.Array:
+    return jnp.where(pages >= 0, pool.page_version[jnp.maximum(pages, 0)], 0)
+
+
 @jax.jit
 def snapshot_versions(pool: PagePool, pages: jax.Array) -> jax.Array:
     """Versions of ``pages`` (−1 entries read as 0) — the reader's LocalClock."""
-    return jnp.where(pages >= 0, pool.page_version[jnp.maximum(pages, 0)], 0)
+    return _snapshot_impl(pool, pages)
+
+
+def _validate_and_commit_impl(pool: PagePool, pages: jax.Array,
+                              snapshot: jax.Array):
+    cur = _snapshot_impl(pool, pages)
+    return jnp.all(cur == snapshot, axis=-1), cur
+
+
+@jax.jit
+def validate_and_commit(pool: PagePool, pages: jax.Array, snapshot: jax.Array):
+    """Fused per-row OA check + reader clock advance in ONE pass.
+
+    ``pages`` [..., n]; ``snapshot`` [..., n] (the versions recorded when the
+    rows were last known valid).  Returns (valid [...] bool — True iff no page
+    in the row was reclaimed since the snapshot — and ``cur``, the freshly
+    read versions, which become the next snapshot for rows that commit).
+    Replaces the snapshot → compare → re-snapshot sequence (two full passes
+    over ``page_version`` plus a host-side compare) the engine used per step.
+    """
+    return _validate_and_commit_impl(pool, pages, snapshot)
 
 
 @jax.jit

@@ -15,11 +15,16 @@ from .paged_attention import paged_attention_pallas
 from .ref import paged_attention_ref
 
 
-def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref"):
+def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
+                    pages_per_compute_block: int = 1):
     """Decode attention over the paged pool.
 
     q [B, Hq, D]; kv {'k','v': [P, page, Hkv, D]}; block_tables [B, max_pages];
     lengths [B].  Returns [B, Hq, D].
+
+    ``pages_per_compute_block`` tiles the Pallas grid: each grid step fetches
+    that many KV pages and runs one set of MXU dots over the combined
+    (ppcb*page_size, Hkv*D) tile (ignored by the jnp reference).
     """
     if impl == "ref":
         return paged_attention_ref(q, kv["k"], kv["v"], block_tables, lengths)
@@ -28,5 +33,6 @@ def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref"):
     return paged_attention_pallas(
         q, kv["k"], kv["v"], block_tables, lengths,
         page_size=page_size, n_kv_heads=n_kv_heads,
+        pages_per_compute_block=pages_per_compute_block,
         interpret=(impl == "interpret"),
     )

@@ -1,26 +1,39 @@
 """Pallas TPU kernel: decode attention over the versioned page pool.
 
 This is the compute hot-spot of the paper's device-side adaptation: the
-optimistic reader.  It walks a sequence's block table page-by-page, DMA'ing
-each KV page HBM→VMEM exactly once and keeping the flash accumulator state
-(m, l, acc) in VMEM scratch — the jnp reference path instead materializes
-the gathered [S, Hkv, D] cache in HBM (2× traffic on the dominant term of
-the decode roofline; see EXPERIMENTS.md §Perf).
+optimistic reader.  It walks a sequence's block table in compute blocks of
+``pages_per_compute_block`` KV pages, DMA'ing each page HBM→VMEM exactly
+once and keeping the flash accumulator state (m, l, acc) in VMEM scratch —
+the jnp reference path instead materializes the gathered [S, Hkv, D] cache
+in HBM (2× traffic on the dominant term of the decode roofline; see
+EXPERIMENTS.md §Perf).
 
 TPU mapping:
-- grid = (batch, max_pages); the block table rides in scalar-prefetch memory
-  (SMEM) so the ``index_map`` can translate virtual page slots to physical
-  page ids *before* the DMA is issued — the pagemap lookup of LRMalloc, done
-  by the DMA engine.
+- grid = (batch, ceil(max_pages / pages_per_compute_block)); the block table
+  rides in scalar-prefetch memory (SMEM) so the ``index_map`` can translate
+  virtual page slots to physical page ids *before* the DMAs are issued — the
+  pagemap lookup of LRMalloc, done by the DMA engine.
+- Each grid step assembles a (ppcb*page_size, Hkv*D) KV tile from ``ppcb``
+  independently-mapped pages (one BlockSpec per page within the block — the
+  pages are scattered in the arena, so each needs its own translation), then
+  issues ONE set of MXU dots over the whole tile.  Larger ``ppcb`` ⇒ fewer
+  grid steps, fewer accumulator round-trips, larger dots — the same
+  batching-of-validation amortization OA applies to reclamation.
+- ``pl.when`` skips the COMPUTE (dots, softmax accumulation, scratch
+  round-trips) for blocks that are entirely past ``lengths[b]`` or fully
+  unmapped (every table entry < 0).  Note the BlockSpec DMAs are still
+  issued for skipped blocks — index_maps run regardless of kernel-body
+  predicates — so ragged padding saves FLOPs and accumulator traffic, not
+  HBM reads.
 - Freed pages remain mapped in the persistent arena, so a stale block table
   entry fetches garbage *safely*; the scheduler's version check discards the
   result (OA semantics — reads validated after the fact).
-- Block shapes: KV pages arrive as (page_size, Hkv*D) tiles — page_size and
-  Hkv*D should be multiples of (8, 128) for MXU/VREG alignment; q is
-  (Hkv*G, D) = (Hq, D).
+- Block shapes: page_size and Hkv*D should be multiples of (8, 128) for
+  MXU/VREG alignment; q is (Hkv*G, D) = (Hq, D).
 
 Weak spots the sweep tests cover: GQA grouping, ragged lengths mid-page,
-unmapped (-1) table entries, page_size not dividing length.
+unmapped (-1) table entries, page_size not dividing length, max_pages not
+divisible by pages_per_compute_block (padded with -1 slots).
 """
 
 from __future__ import annotations
@@ -35,25 +48,24 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(
     # scalar-prefetch
-    block_tables_ref,  # [B, max_pages] (SMEM)
+    block_tables_ref,  # [B, nblocks*ppcb] (SMEM)
     lengths_ref,  # [B] (SMEM)
-    # blocked inputs
+    # blocked inputs: q, then ppcb k-page refs, then ppcb v-page refs
     q_ref,  # [1, Hq, D]
-    k_ref,  # [1, page, Hkv, D]
-    v_ref,  # [1, page, Hkv, D]
-    # output
-    o_ref,  # [1, Hq, D]
-    # VMEM scratch
-    m_ref,  # [Hq]
-    l_ref,  # [Hq]
-    acc_ref,  # [Hq, D]
-    *,
+    *refs,
     page_size: int,
     n_kv_heads: int,
+    ppcb: int,
 ):
+    k_refs = refs[:ppcb]  # each [1, page, Hkv, D]
+    v_refs = refs[ppcb : 2 * ppcb]
+    o_ref = refs[2 * ppcb]  # [1, Hq, D]
+    m_ref, l_ref, acc_ref = refs[2 * ppcb + 1 :]  # VMEM scratch
+
     b = pl.program_id(0)
     i = pl.program_id(1)
-    np_ = pl.num_programs(1)
+    nb = pl.num_programs(1)
+    span = ppcb * page_size
 
     @pl.when(i == 0)
     def _init():
@@ -61,63 +73,90 @@ def _kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0]  # [Hq, D]
-    k = k_ref[0]  # [page, Hkv, D]
-    v = v_ref[0]
-    Hq, D = q.shape
-    G = Hq // n_kv_heads
-    qg = q.reshape(n_kv_heads, G, D).astype(jnp.float32)
-    # [Hkv, G, page] — lowers to one MXU dot per kv head
-    s = jnp.einsum("hgd,phd->hgp", qg, k.astype(jnp.float32))
-    s = s * (1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)))
+    # per-page mapped bits from SMEM — drive both the skip predicate and the
+    # position mask (an unmapped page inside the block contributes nothing)
+    mapped = jnp.stack(
+        [block_tables_ref[b, i * ppcb + j] >= 0 for j in range(ppcb)]
+    )
+    start = i * span
+    block_live = (start < lengths_ref[b]) & jnp.any(mapped)
 
-    pos = i * page_size + jax.lax.iota(jnp.int32, page_size)
-    live = (pos < lengths_ref[b]) & (block_tables_ref[b, i] >= 0)
-    s = jnp.where(live[None, None, :], s, -jnp.inf)
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0]  # [Hq, D]
+        k = jnp.concatenate([r[0] for r in k_refs], axis=0)  # [span, Hkv, D]
+        v = jnp.concatenate([r[0] for r in v_refs], axis=0)
+        Hq, D = q.shape
+        G = Hq // n_kv_heads
+        qg = q.reshape(n_kv_heads, G, D).astype(jnp.float32)
+        # [Hkv, G, span] — one MXU dot per kv head over the whole block
+        s = jnp.einsum("hgd,phd->hgp", qg, k.astype(jnp.float32))
+        s = s * (1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)))
 
-    m_prev = m_ref[...].reshape(n_kv_heads, G)
-    l_prev = l_ref[...].reshape(n_kv_heads, G)
-    acc_prev = acc_ref[...].reshape(n_kv_heads, G, D)
+        pos = start + jax.lax.iota(jnp.int32, span)
+        live = (pos < lengths_ref[b]) & jnp.repeat(mapped, page_size)
+        s = jnp.where(live[None, None, :], s, -jnp.inf)
 
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    p = jnp.where(live[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
-    pv = jnp.einsum("hgp,phd->hgd", p, v.astype(jnp.float32))
-    acc_new = acc_prev * alpha[..., None] + pv
+        m_prev = m_ref[...].reshape(n_kv_heads, G)
+        l_prev = l_ref[...].reshape(n_kv_heads, G)
+        acc_prev = acc_ref[...].reshape(n_kv_heads, G, D)
 
-    m_ref[...] = m_new.reshape(Hq)
-    l_ref[...] = l_new.reshape(Hq)
-    acc_ref[...] = acc_new.reshape(Hq, D)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(live[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("hgp,phd->hgd", p, v.astype(jnp.float32))
+        acc_new = acc_prev * alpha[..., None] + pv
 
-    @pl.when(i == np_ - 1)
+        m_ref[...] = m_new.reshape(Hq)
+        l_ref[...] = l_new.reshape(Hq)
+        acc_ref[...] = acc_new.reshape(Hq, D)
+
+    @pl.when(i == nb - 1)
     def _finish():
+        Hq, D = o_ref.shape[1], o_ref.shape[2]
+        G = Hq // n_kv_heads
         l = jnp.maximum(l_ref[...].reshape(n_kv_heads, G), 1e-30)
         out = acc_ref[...].reshape(n_kv_heads, G, D) / l[..., None]
         o_ref[0] = out.reshape(Hq, D).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("page_size", "n_kv_heads", "interpret")
+    jax.jit,
+    static_argnames=("page_size", "n_kv_heads", "pages_per_compute_block",
+                     "interpret"),
 )
 def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
-                           page_size: int, n_kv_heads: int, interpret: bool = True):
+                           page_size: int, n_kv_heads: int,
+                           pages_per_compute_block: int = 1,
+                           interpret: bool = True):
     """q [B, Hq, D] -> [B, Hq, D].  See module docstring for layout rules."""
     B, Hq, D = q.shape
+    ppcb = max(int(pages_per_compute_block), 1)
     max_pages = block_tables.shape[1]
+    nblocks = -(-max_pages // ppcb)
+    if nblocks * ppcb != max_pages:
+        block_tables = jnp.pad(
+            block_tables, ((0, 0), (0, nblocks * ppcb - max_pages)),
+            constant_values=-1)
 
-    def page_map(b, i, bt, ln):
-        return (jnp.maximum(bt[b, i], 0), 0, 0, 0)
+    def page_map(j):
+        # each of the block's ppcb pages gets its own virtual→physical
+        # translation (they are scattered in the arena)
+        def m(b, i, bt, ln):
+            return (jnp.maximum(bt[b, i * ppcb + j], 0), 0, 0, 0)
+        return m
 
+    kv_spec = lambda j: pl.BlockSpec((1, page_size, n_kv_heads, D), page_map(j))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, n_kv_heads, D), page_map),
-            pl.BlockSpec((1, page_size, n_kv_heads, D), page_map),
-        ],
+        grid=(B, nblocks),
+        in_specs=(
+            [pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0))]
+            + [kv_spec(j) for j in range(ppcb)]
+            + [kv_spec(j) for j in range(ppcb)]
+        ),
         out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hq,), jnp.float32),
@@ -125,10 +164,12 @@ def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
             pltpu.VMEM((Hq, D), jnp.float32),
         ],
     )
-    kern = functools.partial(_kernel, page_size=page_size, n_kv_heads=n_kv_heads)
+    kern = functools.partial(_kernel, page_size=page_size,
+                             n_kv_heads=n_kv_heads, ppcb=ppcb)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, q, k_pages, v_pages)
+    )(block_tables, lengths, q,
+      *([k_pages] * ppcb), *([v_pages] * ppcb))

@@ -1,5 +1,5 @@
 from .engine import PagedServingEngine, Request, EngineStats
-from .paged_decode import paged_decode_step, kv_storage_init
+from .paged_decode import paged_decode_step, fused_decode_step, kv_storage_init
 
 __all__ = ["PagedServingEngine", "Request", "EngineStats",
-           "paged_decode_step", "kv_storage_init"]
+           "paged_decode_step", "fused_decode_step", "kv_storage_init"]

@@ -7,13 +7,23 @@ The OA story end-to-end (DESIGN.md §2):
   pressure — its pages are freed *optimistically*: versions bump and the
   pages become allocatable immediately, without fencing against the decode
   step that may still be reading them.
-- **optimistic access**: every step snapshots the versions of the pages it
-  will read before launch and validates after; on mismatch the step's
-  output for that sequence is discarded and the request restarts from its
-  last committed state (re-queued), exactly the OA read protocol.
+- **optimistic access**: every slot carries a persistent device-side version
+  snapshot taken when its pages were granted; each fused step validates the
+  current versions against it and discards rows whose pages were reclaimed
+  in between (the request restarts from its last committed state), exactly
+  the OA read protocol.
 - **hazard pointers**: pages a step *writes* (the append slot) belong to
   requests pinned in the running batch — the scheduler never frees those,
   which is the structural analogue of protect-then-validate-then-CAS.
+
+Hot-path contract (the point of this engine): block tables, lengths, the
+prompt buffer, the OA snapshot and the free pool are persistent DEVICE
+arrays updated functionally by ``fused_decode_step``; a steady-state decode
+step performs exactly ONE host transfer ([B] tokens + [B] valid + [B]
+grant-ok in a single ``device_get``) and zero host→device uploads.  The
+Python scheduler touches host state only on admission, preemption, and
+completion — the same amortization the paper applies to reclamation
+(validate once per batch, not once per page).
 
 Counters mirror the paper's: warnings fired (pool clock), reader restarts,
 preemptions, reclaimed pages.
@@ -22,6 +32,8 @@ preemptions, reclaimed pages.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import itertools
 import time
 from collections import deque
 
@@ -30,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pagepool as pp
-from .paged_decode import kv_storage_init, paged_decode_step
+from .paged_decode import fused_decode_step, kv_storage_init
 
 
 @dataclasses.dataclass
@@ -40,19 +52,27 @@ class Request:
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     committed: int = 0  # tokens (prompt+generated) whose KV is committed
-    pages: list[int] = dataclasses.field(default_factory=list)
     restarts: int = 0
     state: str = "queued"  # queued | running | finished
+    slot: int | None = None  # batch row while running
+    pages_held: int = 0  # host-side page COUNT (ids live on device)
+    externally_reclaimed: bool = False  # a reclaimer raced us and owns the pages
+    reclaim_watermark: int = 0  # pages_held at the moment of the race
+    _engine: "PagedServingEngine | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def target_len(self) -> int:
         return len(self.prompt) + self.max_new_tokens
 
     @property
-    def next_token(self) -> int:
-        # the token whose KV this step commits (position == self.committed)
-        seq = self.prompt + self.generated
-        return seq[self.committed]
+    def pages(self) -> list[int]:
+        """Physical page ids currently mapped (reads the device block table —
+        introspection/test helper, never called on the hot path)."""
+        if self.slot is None or self._engine is None:
+            return []
+        row = np.asarray(self._engine._bt)[self.slot]
+        return [int(p) for p in row if p >= 0]
 
 
 @dataclasses.dataclass
@@ -63,18 +83,64 @@ class EngineStats:
     reader_restarts: int = 0
     warnings_fired: int = 0
     pages_reclaimed: int = 0
+    wall_seconds: float = 0.0
+    tokens_per_second: float = 0.0
+
+
+# -- jitted slot transitions (admission / release; no host syncs) -----------
+
+
+@functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _admit_slot(pool, bt, snap, lengths, last, active, pbuf, plen,
+                slot, page, prompt_row, prompt_n):
+    bt = bt.at[slot].set(-1).at[slot, 0].set(page)
+    snap = (snap.at[slot].set(0)
+            .at[slot, 0].set(pool.page_version[jnp.maximum(page, 0)]))
+    lengths = lengths.at[slot].set(0)
+    last = last.at[slot].set(0)
+    active = active.at[slot].set(True)
+    pbuf = pbuf.at[slot].set(prompt_row)
+    plen = plen.at[slot].set(prompt_n)
+    return bt, snap, lengths, last, active, pbuf, plen
+
+
+def _clear_slot_impl(bt, snap, lengths, last, active, slot):
+    bt = bt.at[slot].set(-1)
+    snap = snap.at[slot].set(0)
+    lengths = lengths.at[slot].set(0)
+    last = last.at[slot].set(0)
+    active = active.at[slot].set(False)
+    return bt, snap, lengths, last, active
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _clear_slot(bt, snap, lengths, last, active, slot):
+    """Discard a slot WITHOUT freeing its pages (the racing reclaimer that
+    invalidated the slot owns them — freeing again would double-push)."""
+    return _clear_slot_impl(bt, snap, lengths, last, active, slot)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
+def _release_slot(pool, bt, snap, lengths, last, active, slot):
+    """OPTIMISTIC free of one slot's pages: versions bump, clock ticks once,
+    the slot is cleared — all device-side, no host round trip."""
+    pool = pp._free_pages_impl(pool, bt[slot])
+    return (pool,) + _clear_slot_impl(bt, snap, lengths, last, active, slot)
 
 
 class PagedServingEngine:
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int = 8, max_pages_per_seq: int | None = None,
-                 attn_impl: str = "ref", greedy: bool = True):
+                 attn_impl: str = "ref", greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0,
+                 pages_per_compute_block: int = 1):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_batch = max_batch
         self.attn_impl = attn_impl
+        self.pages_per_compute_block = pages_per_compute_block
         self.pool = pp.pool_init(num_pages)
         self.kv = kv_storage_init(cfg, num_pages, page_size)
         self.max_pages_per_seq = max_pages_per_seq or num_pages
@@ -82,25 +148,27 @@ class PagedServingEngine:
         self.running: list[Request] = []
         self.stats = EngineStats()
         self.greedy = greedy
+        self._temperature = jnp.asarray(temperature, jnp.float32)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._step_idx = 0
+        self._next_rid = itertools.count(1000)
+        self._warning_batches = 0  # host mirror of pool.clock (no sync)
+
+        # persistent device-side batch state
+        B, M = max_batch, self.max_pages_per_seq
+        self._bt = jnp.full((B, M), -1, jnp.int32)
+        self._snap = jnp.zeros((B, M), jnp.uint32)
+        self._len = jnp.zeros((B,), jnp.int32)
+        self._last = jnp.zeros((B,), jnp.int32)
+        self._active = jnp.zeros((B,), bool)
+        self._prompt_cap = 16
+        self._pbuf = jnp.zeros((B, self._prompt_cap), jnp.int32)
+        self._plen = jnp.zeros((B,), jnp.int32)
+        self._slots: list[Request | None] = [None] * B
 
     # -- page accounting --------------------------------------------------------
 
-    def _ensure_pages(self, req: Request, length_after: int) -> bool:
-        """Grow req's block table to cover ``length_after`` tokens; preempt
-        victims if the pool is exhausted.  False if req itself must wait."""
-        need = (length_after + self.page_size - 1) // self.page_size
-        while len(req.pages) < need:
-            self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
-            if bool(ok):
-                req.pages.append(int(pages[0]))
-                continue
-            victim = self._pick_victim(exclude=req)
-            if victim is None:
-                return False
-            self._preempt(victim)
-        return True
-
-    def _pick_victim(self, exclude: Request):
+    def _pick_victim(self, exclude: Request | None = None):
         cands = [r for r in self.running if r is not exclude]
         if not cands:
             return None
@@ -110,7 +178,7 @@ class PagedServingEngine:
     def _preempt(self, victim: Request) -> None:
         """OPTIMISTIC free: pages are reclaimed immediately — any in-flight
         read of them will fail version validation and restart."""
-        self._release_pages(victim)
+        self._free_slot(victim)
         victim.state = "queued"
         victim.committed = 0
         victim.generated = []  # restart from a known-valid root (the prompt)
@@ -119,27 +187,55 @@ class PagedServingEngine:
         self.queue.append(victim)
         self.stats.preemptions += 1
 
-    def _release_pages(self, req: Request) -> None:
-        if req.pages:
-            arr = jnp.asarray(req.pages, jnp.int32)
-            self.pool = pp.free_pages(self.pool, arr)
-            self.stats.pages_reclaimed += len(req.pages)
-        req.pages = []
-
-    def _block_table(self, req: Request) -> np.ndarray:
-        bt = np.full((self.max_pages_per_seq,), -1, np.int32)
-        bt[: len(req.pages)] = req.pages
-        return bt
+    def _free_slot(self, req: Request) -> None:
+        assert req.slot is not None
+        if req.externally_reclaimed:
+            # the racing reclaimer owns every page it saw (freeing those
+            # again would double-push); only pages granted AFTER the race —
+            # at most one, past the watermark — are still slot-owned
+            if req.pages_held > req.reclaim_watermark:
+                self.pool = pp.free_pages(
+                    self.pool, self._bt[req.slot, req.reclaim_watermark:])
+                self._warning_batches += 1
+                self.stats.warnings_fired = self._warning_batches
+                self.stats.pages_reclaimed += (
+                    req.pages_held - req.reclaim_watermark)
+            (self._bt, self._snap, self._len, self._last,
+             self._active) = _clear_slot(
+                self._bt, self._snap, self._len, self._last,
+                self._active, req.slot)
+            req.externally_reclaimed = False
+        else:
+            (self.pool, self._bt, self._snap, self._len, self._last,
+             self._active) = _release_slot(
+                self.pool, self._bt, self._snap, self._len, self._last,
+                self._active, req.slot)
+            self._warning_batches += 1  # free_pages ticks the clock once
+            self.stats.warnings_fired = self._warning_batches
+            self.stats.pages_reclaimed += req.pages_held
+        self._slots[req.slot] = None
+        req.slot = None
+        req.pages_held = 0
 
     # -- scheduling -------------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
-        req = Request(rid=len(self.queue) + len(self.running) + 1000,
-                      prompt=list(prompt), max_new_tokens=max_new_tokens)
+        req = Request(rid=next(self._next_rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, _engine=self)
         self.queue.append(req)
         return req
 
+    def _ensure_prompt_cap(self, n: int) -> None:
+        if n <= self._prompt_cap:
+            return
+        cap = self._prompt_cap
+        while cap < n:
+            cap *= 2
+        self._pbuf = jnp.pad(self._pbuf, ((0, 0), (0, cap - self._prompt_cap)))
+        self._prompt_cap = cap
+
     def _admit(self) -> None:
+        """Admission touches host state freely (allowed sync point)."""
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
             need_total = (req.target_len + self.page_size - 1) // self.page_size
@@ -147,69 +243,141 @@ class PagedServingEngine:
                 raise MemoryError(
                     f"request {req.rid} needs {need_total} pages; the pool "
                     f"can never satisfy it (num_pages={self.num_pages})")
-            if not self._ensure_pages(req, req.committed + 1):
+            # Starvation guard: running rows that need a page THIS step have
+            # first claim on the free pool.  Without this, admission can keep
+            # stealing the page a preemption just freed for a starved row —
+            # an admit/starve/preempt livelock.  (Host-side arithmetic only:
+            # pages_held mirrors the device grants, so no sync.)
+            held = sum(r.pages_held for r in self.running)
+            need_now = sum(1 for r in self.running
+                           if (r.committed // self.page_size) >= r.pages_held)
+            if self.num_pages - held - need_now < 1:
                 break
+            while True:
+                self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
+                if bool(ok):
+                    break
+                victim = self._pick_victim(exclude=req)
+                if victim is None:
+                    return  # req waits for memory
+                self._preempt(victim)  # free pages, then retry the alloc
+            slot = self._slots.index(None)
+            self._ensure_prompt_cap(len(req.prompt))
+            row = np.zeros((self._prompt_cap,), np.int32)
+            row[: len(req.prompt)] = req.prompt
+            (self._bt, self._snap, self._len, self._last, self._active,
+             self._pbuf, self._plen) = _admit_slot(
+                self.pool, self._bt, self._snap, self._len, self._last,
+                self._active, self._pbuf, self._plen,
+                jnp.asarray(slot, jnp.int32), pages[0],
+                jnp.asarray(row), jnp.asarray(len(req.prompt), jnp.int32))
             self.queue.popleft()
             req.state = "running"
+            req.slot = slot
+            req.pages_held = 1
+            self._slots[slot] = req
             self.running.append(req)
+            # a preemption above may have requeued the victim behind req;
+            # keep admitting — the loop condition re-checks capacity
+
+    def _pick_victim_and_preempt(self, starved: list[Request]) -> bool:
+        """Evict to unblock ``starved`` rows: prefer the youngest NON-starved
+        request (evicting a starved row would restart the work we are trying
+        to unblock); if every running row is starved, evict the youngest of
+        those — it both frees pages and withdraws its own demand."""
+        cands = [r for r in self.running if r not in starved] or self.running
+        if not cands:
+            return False
+        self._preempt(min(cands, key=lambda r: r.committed))
+        return True
 
     # -- the decode loop ----------------------------------------------------------
+
+    def inject_external_reclaim(self, req: Request) -> None:
+        """TEST/RACE HOOK — simulate a reclaimer racing the decode loop: the
+        request's pages are freed (versions bump, the warning fires) while
+        the scheduler still believes the request is running with a valid
+        snapshot.  This is the OA race proper: the NEXT step's fused
+        validation must observe the version mismatch, discard the row and
+        restart the request (``reader_restarts``).  Ownership of the pages
+        transfers to the reclaimer — the restart path clears the slot
+        without freeing again.
+        """
+        assert req in self.running and req.slot is not None
+        self.pool = pp.free_pages(self.pool, self._bt[req.slot])
+        self._warning_batches += 1
+        self.stats.warnings_fired = self._warning_batches
+        self.stats.pages_reclaimed += req.pages_held
+        req.externally_reclaimed = True
+        req.reclaim_watermark = req.pages_held
 
     def step(self, *, inject_preemption_of: Request | None = None) -> None:
         """One batched decode step over all running requests.
 
-        ``inject_preemption_of`` frees that request's pages AFTER launch but
-        BEFORE validation — the OA race the version check must catch (used
-        by tests; in production the same interleaving happens when the
-        scheduler thread overlaps with device execution).
+        ``inject_preemption_of`` preempts that request AFTER the step
+        launched but BEFORE the engine consumes its results — its row's
+        output is discarded (the scheduler-overlap interleaving; used by
+        tests).  For the version-check race proper see
+        :meth:`inject_external_reclaim`.
         """
-        batch = list(self.running)
-        if not batch:
-            return
-        B = len(batch)
-        tokens = np.array([r.next_token for r in batch], np.int32)
-        lengths = np.array([r.committed for r in batch], np.int32)
-        for r in batch:
-            if r.state == "running" and not self._ensure_pages(r, r.committed + 1):
-                self._preempt(r)  # cannot grow and nothing to evict: requeue
-        tables = np.stack([self._block_table(r) for r in batch])
         if not self.running:
             return
+        ps = self.page_size
+        self._step_idx += 1
+        # greedy decode never consumes the key — skip the fold_in dispatches
+        key = (self._base_key if self.greedy
+               else jax.random.fold_in(self._base_key, self._step_idx))
 
-        # OA: snapshot versions of every page this step will read
-        pages_flat = jnp.asarray(tables, jnp.int32)
-        snapshot = pp.snapshot_versions(self.pool, pages_flat)
+        (self.kv, self.pool, self._bt, self._snap, self._len, self._last,
+         nxt, valid, grant_ok) = fused_decode_step(
+            self.params, self.kv, self.pool, self._bt, self._snap,
+            self._len, self._last, self._active, self._pbuf, self._plen,
+            key, self._temperature, cfg=self.cfg, impl=self.attn_impl,
+            greedy=self.greedy,
+            pages_per_compute_block=self.pages_per_compute_block)
 
-        logits, self.kv = paged_decode_step(
-            self.params, self.kv, jnp.asarray(tables), jnp.asarray(lengths),
-            jnp.asarray(tokens), cfg=self.cfg, impl=self.attn_impl,
-        )
+        # THE one host transfer of the steady-state step
+        tok_np, valid_np, grant_np = jax.device_get((nxt, valid, grant_ok))
+
+        # host mirror of the device-side page grants (before any preemption
+        # can reset a row's counters)
+        growth: dict[int, bool] = {}
+        for req in self.running:
+            needed = (req.committed // ps) >= req.pages_held
+            growth[req.rid] = needed
+            if needed and grant_np[req.slot]:
+                req.pages_held += 1  # grant landed (even if the row restarts)
 
         if inject_preemption_of is not None and inject_preemption_of in self.running:
+            # reclaim mid-flight, after the step launched: its results die
             self._preempt(inject_preemption_of)
 
-        # OA validation: discard results whose pages were reclaimed mid-flight
-        cur = pp.snapshot_versions(self.pool, pages_flat)
-        valid_rows = np.asarray(jnp.all(cur == snapshot, axis=1))
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-
-        for i, req in enumerate(batch):
+        starved: list[Request] = []
+        for req in list(self.running):
             if req.state != "running":
                 continue  # preempted mid-flight; its row is dead anyway
-            if not valid_rows[i]:
-                self.stats.reader_restarts += 1
-                self._preempt(req)  # restart from known-valid root
+            i = req.slot
+            needed = growth[req.rid]
+            if not valid_np[i]:
+                if needed and not grant_np[i]:
+                    starved.append(req)  # stays running; retry after eviction
+                else:
+                    # OA validation failure: a page was reclaimed since its
+                    # snapshot — discard and restart from a known-valid state
+                    self.stats.reader_restarts += 1
+                    self._preempt(req)
                 continue
             req.committed += 1
             self.stats.tokens_committed += 1
             if req.committed >= len(req.prompt) and len(req.generated) < req.max_new_tokens:
-                req.generated.append(int(next_tokens[i]))
+                req.generated.append(int(tok_np[i]))
             if len(req.generated) >= req.max_new_tokens:
                 req.state = "finished"
                 self.running.remove(req)
-                self._release_pages(req)  # retire: fires the warning
+                self._free_slot(req)  # retire: fires the warning
+        if starved:
+            self._pick_victim_and_preempt(starved)
         self.stats.steps += 1
-        self.stats.warnings_fired = int(self.pool.clock)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         t0 = time.time()
@@ -220,5 +388,8 @@ class PagedServingEngine:
             if not self.running:  # queue blocked on memory: forced preemption failed
                 raise MemoryError("pool exhausted with empty running set")
             self.step()
-        self.stats.wall_seconds = time.time() - t0  # type: ignore[attr-defined]
+        self.stats.wall_seconds = time.time() - t0
+        self.stats.tokens_per_second = (
+            self.stats.tokens_committed / self.stats.wall_seconds
+            if self.stats.wall_seconds > 0 else 0.0)
         return self.stats

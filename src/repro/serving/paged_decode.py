@@ -4,6 +4,19 @@ Same math as ``transformer.decoder_decode_step`` but the KV cache lives in
 the versioned page pool: storage [L, P, page, Hkv, D], one block table per
 sequence shared by all layers (vLLM layout).  Attention goes through
 ``repro.kernels.ops.paged_attention`` (Pallas on TPU, oracle on CPU).
+
+Two entry points:
+
+- ``paged_decode_step``: the bare model math — (logits, kv).  Kept for
+  benchmarking the pre-fusion hot path and for callers that want logits.
+- ``fused_decode_step``: the serving hot path.  Page growth (batched pool
+  alloc), next-token routing (prompt replay vs. last sample), KV append,
+  attention, token selection (greedy or temperature sampling) and the OA
+  snapshot/validate protocol all execute in ONE jitted dispatch, so the
+  engine's only per-step host transfer is [B] int32 tokens + [B] bool
+  valid-rows — not logits [B, vocab] plus two version arrays.  This is the
+  paper's amortization argument applied to the decode loop: the version
+  check is cheap because it is batched and fused with the read it guards.
 """
 
 from __future__ import annotations
@@ -13,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import pagepool as pp
 from repro.kernels.ops import paged_attention
 from repro.models.layers import apply_norm, attention_qkv, mlp_apply
 from repro.models.transformer import embed_tokens, unembed
@@ -23,16 +37,8 @@ def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(1,))
-def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
-                      impl: str = "ref"):
-    """One token for every sequence.
-
-    kv: {'k','v': [L, P, page, Hkv, D]} (donated, updated in place);
-    block_tables [B, max_pages] int32; lengths [B] int32 (current length —
-    the new token lands at position ``lengths``); tokens [B] int32.
-    Returns (logits [B, vocab], kv).
-    """
+def _decode_core(params, kv, block_tables, lengths, tokens, *, cfg,
+                 impl: str = "ref", pages_per_compute_block: int = 1):
     assert cfg.family in ("dense", "moe", "vlm"), "paged decode: decoder LMs only"
     B = tokens.shape[0]
     page_size = kv["k"].shape[2]
@@ -51,7 +57,8 @@ def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
         kl = kl.at[pidx, slot].set(k[:, 0], mode="drop")
         vl = vl.at[pidx, slot].set(v[:, 0], mode="drop")
         att = paged_attention(q[:, 0], {"k": kl, "v": vl}, block_tables,
-                              lengths + 1, impl=impl)
+                              lengths + 1, impl=impl,
+                              pages_per_compute_block=pages_per_compute_block)
         x = x + att.reshape(B, 1, -1) @ blk["attn"]["wo"]
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
@@ -65,3 +72,100 @@ def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
     x = apply_norm(cfg, x, params["final_norm"])
     logits = unembed(cfg, params, x)[:, 0].astype(jnp.float32)
     return logits, {"k": ks, "v": vs}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(1,))
+def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
+                      impl: str = "ref"):
+    """One token for every sequence.
+
+    kv: {'k','v': [L, P, page, Hkv, D]} (donated, updated in place);
+    block_tables [B, max_pages] int32; lengths [B] int32 (current length —
+    the new token lands at position ``lengths``); tokens [B] int32.
+    Returns (logits [B, vocab], kv).
+    """
+    return _decode_core(params, kv, block_tables, lengths, tokens, cfg=cfg,
+                        impl=impl)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "impl", "greedy", "pages_per_compute_block"),
+    donate_argnums=(1, 2, 3, 4, 5, 6),
+)
+def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
+                      last_tok, active, prompt_buf, prompt_len, key,
+                      temperature, *, cfg, impl: str = "ref",
+                      greedy: bool = True, pages_per_compute_block: int = 1):
+    """The sync-free batched decode step: one dispatch, one host transfer.
+
+    Device-resident engine state (all donated, threaded step to step):
+      kv            {'k','v': [L, P, page, Hkv, D]} — persistent KV arena
+      pool          PagePool — versioned free list (OA warning channel)
+      block_tables  [B, max_pages] int32, −1 = unmapped
+      snapshot      [B, max_pages] uint32 — versions at last known-valid point
+      lengths       [B] int32 — committed tokens per slot
+      last_tok      [B] int32 — last sampled token (decode-phase input)
+      active        [B] bool — slot occupancy mask (inactive rows frozen)
+      prompt_buf    [B, cap] int32 / prompt_len [B] int32 — prompt replay
+      key           PRNG key for sampling; temperature [] f32 (greedy=False)
+
+    Fused pipeline: (1) batched page growth — rows whose new token lands on
+    an unmapped page get one page from the pool via the prefix-granting
+    batch allocator, with the grant's version folded into the snapshot;
+    (2) input routing — prompt token while ``lengths < prompt_len``, else
+    the previous sample; (3) model math (KV append + paged attention);
+    (4) on-device token selection; (5) fused OA validation against the
+    persistent snapshot.  Rows fail validation if a page they read was
+    reclaimed since its snapshot (version bump) or if their grant was
+    starved; only valid rows advance ``lengths``/``last_tok``.
+
+    Returns (kv, pool, block_tables, snapshot, lengths, last_tok,
+    tokens [B] int32, valid [B] bool, grant_ok [B] bool).  The engine does a
+    single ``device_get`` of the last three.
+    """
+    B = block_tables.shape[0]
+    page_size = kv["k"].shape[2]
+    rows = jnp.arange(B)
+
+    # (1) batched page growth — the fused alloc_pages_batch path
+    page_idx = lengths // page_size
+    cur_page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    need = (active & (cur_page < 0)).astype(jnp.int32)
+    pool, grants, _ = pp._alloc_pages_batch_impl(pool, need, 1)
+    g = grants[:, 0]
+    block_tables = block_tables.at[rows, page_idx].set(
+        jnp.where(g >= 0, g, cur_page))
+    snapshot = snapshot.at[rows, page_idx].set(
+        jnp.where(g >= 0, pool.page_version[jnp.maximum(g, 0)],
+                  snapshot[rows, page_idx]))
+    grant_ok = (need == 0) | (g >= 0)
+
+    # (2) next input token: replay the prompt, then feed back the sample
+    cap = prompt_buf.shape[1]
+    ppos = jnp.minimum(lengths, cap - 1)
+    tok_in = jnp.where(
+        lengths < prompt_len,
+        jnp.take_along_axis(prompt_buf, ppos[:, None], axis=1)[:, 0],
+        last_tok)
+
+    # (3) model math
+    logits, kv = _decode_core(
+        params, kv, block_tables, lengths, tok_in, cfg=cfg, impl=impl,
+        pages_per_compute_block=pages_per_compute_block)
+
+    # (4) on-device token selection — logits never leave the device
+    if greedy:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        nxt = jax.random.categorical(
+            key, logits / jnp.maximum(temperature, 1e-6), axis=-1
+        ).astype(jnp.int32)
+
+    # (5) fused OA validation: one pass over page_version per step
+    valid, _ = pp._validate_and_commit_impl(pool, block_tables, snapshot)
+    valid = valid & active & grant_ok
+    lengths = jnp.where(valid, lengths + 1, lengths)
+    last_tok = jnp.where(valid, nxt, last_tok)
+    return (kv, pool, block_tables, snapshot, lengths, last_tok,
+            nxt, valid, grant_ok)

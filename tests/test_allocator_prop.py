@@ -1,5 +1,10 @@
 """Hypothesis property tests on the allocator's invariants."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 

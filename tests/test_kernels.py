@@ -48,6 +48,58 @@ def test_paged_attention_matches_ref(case, dtype):
         atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("ppcb", [1, 2, 4])
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_multi_page_blocks_match_ref(case, ppcb):
+    """pages_per_compute_block tiling must be bit-identical (fp32 accum) to
+    the single-page walk across the GQA/ragged/unmapped sweep — including
+    max_pages not divisible by ppcb (padded with -1 slots)."""
+    P, page, Hkv, D, Hq, B, maxp = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    ks = jax.random.split(rng, 3)
+    kv = {"k": jax.random.normal(ks[0], (P, page, Hkv, D), jnp.float32),
+          "v": jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)}
+    q = jax.random.normal(ks[2], (B, Hq, D), jnp.float32)
+    bt = np.full((B, maxp), -1, np.int32)
+    rnd = np.random.default_rng(1)
+    pool = rnd.permutation(P)
+    used = 0
+    lens = []
+    for b in range(B):
+        n = int(rnd.integers(1, maxp + 1))
+        bt[b, :n] = pool[used : used + n]
+        used += n
+        lens.append(int(rnd.integers(1, n * page + 1)))
+    bt = jnp.asarray(bt)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    ref = paged_attention_ref(q, kv["k"], kv["v"], bt, lens)
+    out = paged_attention(q, kv, bt, lens, impl="interpret",
+                          pages_per_compute_block=ppcb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_multi_page_blocks_skip_unmapped_interior():
+    """A fully-unmapped row must stay finite, and interior -1 entries past
+    the live length must not perturb the result."""
+    P, page, Hkv, D, Hq = 8, 4, 2, 16, 4
+    rng = jax.random.PRNGKey(3)
+    kv = {"k": jax.random.normal(rng, (P, page, Hkv, D), jnp.float32),
+          "v": jax.random.normal(jax.random.fold_in(rng, 1),
+                                 (P, page, Hkv, D), jnp.float32)}
+    q = jax.random.normal(jax.random.fold_in(rng, 2), (2, Hq, D), jnp.float32)
+    bt = jnp.array([[2, 5, -1, -1], [-1, -1, -1, -1]], jnp.int32)
+    lens = jnp.array([6, 1], jnp.int32)
+    ref = paged_attention_ref(q[:1], kv["k"], kv["v"], bt[:1], lens[:1])
+    for ppcb in (1, 2, 4):
+        out = paged_attention(q, kv, bt, lens, impl="interpret",
+                              pages_per_compute_block=ppcb)
+        np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
 def test_single_token_length():
     P, page, Hkv, D, Hq, B = 8, 8, 2, 16, 4, 2
     rng = jax.random.PRNGKey(1)

@@ -1,4 +1,12 @@
-"""Device page pool: OA invariants, unit + hypothesis property tests."""
+"""Device page pool: OA invariants, unit + hypothesis property tests.
+
+(The hypothesis-free batch-API tests live in test_pagepool_batch.py so a
+bare environment still exercises the pool.)"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 
 import hypothesis.strategies as st
 import jax.numpy as jnp

@@ -1,0 +1,88 @@
+"""Fused batch pool APIs: alloc_pages_batch (prefix granting) and
+validate_and_commit (one-pass per-row OA check).  Hypothesis-free so these
+run on a bare environment."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pagepool as pp
+
+
+def test_alloc_batch_grants_whole_batch_in_one_call():
+    pool = pp.pool_init(16)
+    need = jnp.array([1, 0, 1, 1], jnp.int32)
+    pool, grants, ok = pp.alloc_pages_batch(pool, need)
+    g = np.asarray(grants)[:, 0]
+    assert bool(ok)
+    assert g[1] == -1 and all(g[i] >= 0 for i in (0, 2, 3))
+    assert len({g[0], g[2], g[3]}) == 3  # unique pages
+    assert int(pool.free_top) == 13
+
+
+def test_alloc_batch_prefix_grant_on_exhaustion():
+    """The satisfied prefix keeps its pages (progress guarantee); starved
+    rows get -1 and ok=False so the scheduler can evict and retry."""
+    pool = pp.pool_init(2)
+    need = jnp.array([1, 1, 1], jnp.int32)
+    pool, grants, ok = pp.alloc_pages_batch(pool, need)
+    g = np.asarray(grants)[:, 0]
+    assert not bool(ok)
+    assert g[0] >= 0 and g[1] >= 0 and g[2] == -1
+    assert int(pool.free_top) == 0
+    # zero-need rows after the exhaustion point do not fail the batch
+    pool2 = pp.pool_init(1)
+    pool2, grants2, ok2 = pp.alloc_pages_batch(
+        pool2, jnp.array([1, 0], jnp.int32))
+    assert bool(ok2) and np.asarray(grants2)[1, 0] == -1
+
+
+def test_alloc_batch_multi_grow_rows():
+    pool = pp.pool_init(8)
+    need = jnp.array([2, 3], jnp.int32)
+    pool, grants, ok = pp.alloc_pages_batch(pool, need, 4)
+    g = np.asarray(grants)
+    assert bool(ok)
+    got = [int(p) for p in g.ravel() if p >= 0]
+    assert len(got) == 5 and len(set(got)) == 5
+    assert (g[0, 2:] == -1).all() and g[1, 3] == -1
+    assert int(pool.free_top) == 3
+
+
+def test_alloc_batch_matches_sequential_alloc():
+    """Batch grant pops the same pages the per-page loop would."""
+    seq = pp.pool_init(8)
+    ids = []
+    for _ in range(3):
+        seq, pg, _ = pp.alloc_pages(seq, 1)
+        ids.append(int(pg[0]))
+    batch = pp.pool_init(8)
+    batch, grants, _ = pp.alloc_pages_batch(
+        batch, jnp.ones((3,), jnp.int32))
+    assert np.asarray(grants)[:, 0].tolist() == ids
+    assert int(batch.free_top) == int(seq.free_top)
+
+
+def test_validate_and_commit_rows():
+    pool = pp.pool_init(8)
+    pool, a, _ = pp.alloc_pages(pool, 2)
+    pool, b, _ = pp.alloc_pages(pool, 2)
+    tables = jnp.stack([a, b])  # [2, 2]
+    snap = pp.snapshot_versions(pool, tables)
+    valid, cur = pp.validate_and_commit(pool, tables, snap)
+    assert np.asarray(valid).tolist() == [True, True]
+    np.testing.assert_array_equal(np.asarray(cur), np.asarray(snap))
+    # reclaim row 1's pages: only that row fails, and ``cur`` is the fresh
+    # snapshot (versions after the bump) in the same pass
+    pool = pp.free_pages(pool, b)
+    valid, cur = pp.validate_and_commit(pool, tables, snap)
+    assert np.asarray(valid).tolist() == [True, False]
+    assert (np.asarray(cur)[1] == np.asarray(snap)[1] + 1).all()
+
+
+def test_validate_and_commit_ignores_unmapped():
+    pool = pp.pool_init(4)
+    pool, a, _ = pp.alloc_pages(pool, 1)
+    tables = jnp.array([[int(a[0]), -1, -1]], jnp.int32)
+    snap = pp.snapshot_versions(pool, tables)
+    valid, _ = pp.validate_and_commit(pool, tables, snap)
+    assert bool(valid[0])

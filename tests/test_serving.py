@@ -67,6 +67,26 @@ def test_midflight_reclamation_is_caught():
     assert r2.generated == BASELINE[1]  # restarted, still correct
 
 
+def test_external_reclaim_race_caught_by_version_check():
+    """The OA race proper: a reclaimer frees a running request's pages while
+    the scheduler still holds a valid-looking snapshot.  The next step's
+    fused version check must discard the row (reader_restarts) and the
+    request must restart and still finish correctly."""
+    eng = PagedServingEngine(CFG, PARAMS, num_pages=64, page_size=4,
+                             max_batch=2, max_pages_per_seq=8)
+    r1 = eng.submit(PROMPTS[0], 6)
+    r2 = eng.submit(PROMPTS[1], 6)
+    eng._admit()
+    eng.step()
+    eng.inject_external_reclaim(r2)  # versions bump under a live snapshot
+    eng.step()
+    assert eng.stats.reader_restarts == 1
+    assert r2.state == "queued" and r2.committed == 0  # known-valid root
+    eng.run()
+    assert r1.generated == BASELINE[0]
+    assert r2.generated == BASELINE[1]  # restarted, still correct
+
+
 def test_no_live_page_double_mapping():
     """Invariant: at any point, no page appears in two live block tables."""
     eng = PagedServingEngine(CFG, PARAMS, num_pages=5, page_size=4,
