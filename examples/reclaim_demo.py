@@ -32,3 +32,46 @@ for r in ROWS:
     print(f"{r[0]:14s} {r[1]:9d} {r[2]:10d} {r[3]:12d} {r[4]:9d}")
 print("\nkeep: frames stay with the process (reusable, not returned)")
 print("madvise/shared_remap: frames returned to the OS, ranges still readable")
+
+# ---------------------------------------------------------------------------
+# The same story on the DEVICE pool: the serving engine's superblock-
+# structured KV arena shrinks after a burst — EMPTY superblocks leave
+# circulation (versions bumped, the OA warning) and remap on the next burst.
+
+print("\n=== device KV pool: superblock release after a burst ===")
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+cfg = dataclasses.replace(reduced(get_config("olmo-1b")), n_layers=1)
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+eng = PagedServingEngine(
+    cfg, params, num_pages=32, page_size=2, max_batch=4,
+    max_pages_per_seq=8, pages_per_superblock=4,
+    release_strategy=ReleaseStrategy.MADVISE, min_mapped_superblocks=1)
+
+for prompt in ([1, 2, 3], [4, 5], [6, 7, 8], [9, 10]):  # the burst
+    eng.submit(prompt, 8)
+eng.run()
+
+s = eng.stats
+print(f"after burst:  {s.superblocks_mapped}/{s.superblocks_resident} "
+      f"superblocks mapped ({s.mapped_pages} pages)")
+released = eng.shrink()
+s = eng.stats
+print(f"after shrink: {s.superblocks_mapped}/{s.superblocks_resident} "
+      f"superblocks mapped ({s.mapped_pages} pages) — "
+      f"{released} superblocks released")
+r = eng.submit([11, 12, 13], 8)  # the next burst remaps under pressure
+eng.run()
+s = eng.stats
+print(f"next burst:   {s.superblocks_mapped}/{s.superblocks_resident} "
+      f"superblocks mapped again ({s.superblocks_remapped} remapped, "
+      f"{s.preemptions} preemptions) — request {r.state}")
+print("the KV arena itself is palloc'd once: released ranges stay readable,"
+      "\nstale optimistic readers fail version validation instead of faulting")

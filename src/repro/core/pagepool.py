@@ -16,6 +16,30 @@ This is the TPU-native adaptation of the paper (DESIGN.md §2):
   the scheduler for the in-flight batch — the hazard-pointer half of OA,
   enforced structurally.
 
+Superblock structure (LRMalloc §2.3 / §3.2, device edition)
+-----------------------------------------------------------
+Pages are grouped into fixed-size **superblocks** and the free list is
+two-level: one LIFO free list *per superblock* plus a per-superblock anchor
+(free count + mapped bit) packed into device arrays.  A superblock's state
+is derived from its anchor exactly as in LRMalloc Fig. 2:
+
+    FULL     free == 0            (every page allocated)
+    PARTIAL  0 < free < capacity
+    EMPTY    free == capacity     (every page free)
+    UNMAPPED released from circulation (the device analogue of handing the
+             physical frames back to the OS — pages are not allocatable and
+             their versions were bumped at release time)
+
+Allocation prefers PARTIAL superblocks — fullest first — over EMPTY ones
+(one-pass segmented pop over a priority ordering, still a single fused
+dispatch, still sync-free), so frees coalesce into EMPTY superblocks
+instead of fragmenting the arena.  ``release_empty_superblocks`` takes
+EMPTY superblocks out of circulation (version bump catches any in-flight
+optimistic reader of the released range, the OA warning channel again) and
+``map_superblocks`` brings them back under pressure.  The CPU model
+(``core/lrmalloc.py`` + ``core/vm.py``) and this device pool report release
+behaviour through the same ``ReleaseStrategy`` vocabulary.
+
 All state lives in a JAX pytree; all operations are pure and jit-able, so
 the pool shards with the serving mesh (pages over 'data', heads over
 'model') and the alloc/free path adds no host-device sync.
@@ -28,47 +52,156 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from .vm import ReleaseStrategy  # shared release vocabulary (host + device)
+
+__all__ = [
+    "PagePool", "ReleaseStrategy", "pool_init",
+    "SB_FULL", "SB_PARTIAL", "SB_EMPTY", "SB_UNMAPPED", "superblock_states",
+    "alloc_pages", "alloc_pages_batch", "free_pages",
+    "release_empty_superblocks", "map_superblocks",
+    "snapshot_versions", "validate_and_commit", "validate_read",
+    "kv_pages_init", "append_kv", "gather_kv",
+]
+
+#: default superblock granularity (pages); ``pool_init`` clamps to the pool
+DEFAULT_PAGES_PER_SUPERBLOCK = 8
+
+# superblock states (LRMalloc Fig. 2 plus the released state of §3.2)
+SB_FULL, SB_PARTIAL, SB_EMPTY, SB_UNMAPPED = 0, 1, 2, 3
 
 
 class PagePool(NamedTuple):
-    free_stack: jax.Array  # [num_pages] int32, LIFO; valid in [0, free_top)
-    free_top: jax.Array  # [] int32 — number of free pages
-    page_version: jax.Array  # [num_pages] uint32 — bumped on every free
+    sb_pages: jax.Array  # [S, K] int32 per-superblock LIFO free lists
+    sb_free: jax.Array  # [S] int32 anchor: free pages per superblock
+    sb_mapped: jax.Array  # [S] bool anchor: in circulation?
+    page_version: jax.Array  # [num_pages] uint32 — bumped on free + release
     clock: jax.Array  # [] uint32 — global reclamation clock (OA-VER)
 
     @property
     def num_pages(self) -> int:
-        return self.free_stack.shape[0]
+        return self.page_version.shape[0]
+
+    @property
+    def num_superblocks(self) -> int:
+        return self.sb_pages.shape[0]
+
+    @property
+    def pages_per_superblock(self) -> int:
+        return self.sb_pages.shape[1]
+
+    @property
+    def free_top(self) -> jax.Array:
+        """Total allocatable pages (mapped superblocks only) — the flat-pool
+        view the engine and tests reason with."""
+        return _free_total(self)
 
 
-def pool_init(num_pages: int) -> PagePool:
+def _capacities(pool: PagePool) -> jax.Array:
+    """Per-superblock page capacity [S] (the last superblock may be ragged
+    when ``num_pages % pages_per_superblock != 0``)."""
+    S, K = pool.sb_pages.shape
+    return jnp.minimum(K, pool.num_pages - jnp.arange(S, dtype=jnp.int32) * K)
+
+
+def _free_total(pool: PagePool) -> jax.Array:
+    return jnp.sum(jnp.where(pool.sb_mapped, pool.sb_free, 0)).astype(jnp.int32)
+
+
+def superblock_states(pool: PagePool) -> jax.Array:
+    """[S] int32 anchor states: SB_FULL/SB_PARTIAL/SB_EMPTY/SB_UNMAPPED."""
+    cap = _capacities(pool)
+    st = jnp.where(pool.sb_free == 0, SB_FULL,
+                   jnp.where(pool.sb_free >= cap, SB_EMPTY, SB_PARTIAL))
+    return jnp.where(pool.sb_mapped, st, SB_UNMAPPED).astype(jnp.int32)
+
+
+def pool_init(num_pages: int,
+              pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK) -> PagePool:
+    K = max(1, min(pages_per_superblock, num_pages))
+    S = -(-num_pages // K)
+    lists = np.full((S, K), -1, np.int32)
+    caps = np.minimum(K, num_pages - np.arange(S) * K)
+    for s in range(S):
+        c = int(caps[s])
+        # LIFO top is index c-1; lowest page id on top so a fresh pool hands
+        # out ascending ids within each superblock
+        lists[s, :c] = s * K + np.arange(c - 1, -1, -1)
     return PagePool(
-        free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
-        free_top=jnp.asarray(num_pages, jnp.int32),
+        sb_pages=jnp.asarray(lists),
+        sb_free=jnp.asarray(caps, jnp.int32),
+        sb_mapped=jnp.ones((S,), bool),
         page_version=jnp.zeros((num_pages,), jnp.uint32),
         clock=jnp.zeros((), jnp.uint32),
     )
 
 
+# ---------------------------------------------------------------------------
+# allocation: one-pass segmented pop over a superblock priority ordering
+
+
+def _alloc_order(pool: PagePool):
+    """Priority ordering of superblocks for allocation.
+
+    PARTIAL superblocks first (fullest first, i.e. fewest free pages — the
+    LRMalloc anti-fragmentation policy: pack partials so frees coalesce into
+    EMPTY superblocks), then EMPTY ones by index; FULL and UNMAPPED
+    superblocks are excluded.  Returns (order [S], avail-in-order [S]).
+    """
+    S, K = pool.sb_pages.shape
+    cap = _capacities(pool)
+    fc = pool.sb_free
+    allocatable = pool.sb_mapped & (fc > 0)
+    partial = allocatable & (fc < cap)
+    rank = jnp.where(partial, 0, jnp.where(allocatable, 1, 2)).astype(jnp.int32)
+    big = (K + 1) * S
+    sidx = jnp.arange(S, dtype=jnp.int32)
+    key = rank * big + jnp.where(partial, fc, 0) * S + sidx
+    order = jnp.argsort(key).astype(jnp.int32)
+    avail = jnp.where(rank < 2, fc, 0)[order]
+    return order, avail
+
+
+def _segmented_pop_impl(pool: PagePool, total: jax.Array, max_total: int):
+    """Pop ``total`` (<= free_top) pages across superblocks in priority
+    order, in one fused pass.  Returns (pool, pages [max_total] int32 with
+    −1 past ``total``)."""
+    S, K = pool.sb_pages.shape
+    order, avail = _alloc_order(pool)
+    cum = jnp.cumsum(avail)
+    total = jnp.minimum(total.astype(jnp.int32), cum[-1])
+    j = jnp.arange(max_total, dtype=jnp.int32)
+    seg = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    segc = jnp.minimum(seg, S - 1)
+    sb = order[segc]
+    prev = jnp.where(segc > 0, cum[jnp.maximum(segc - 1, 0)], 0)
+    pos = pool.sb_free[sb] - 1 - (j - prev)  # LIFO: pop from the top
+    pages = pool.sb_pages[sb, jnp.clip(pos, 0, K - 1)]
+    pages = jnp.where(j < total, pages, -1).astype(jnp.int32)
+    taken = jnp.clip(total - (cum - avail), 0, avail)
+    return pool._replace(sb_free=pool.sb_free.at[order].add(-taken)), pages
+
+
 def _alloc_pages_batch_impl(pool: PagePool, need: jax.Array, max_grow: int):
     """Traceable body of :func:`alloc_pages_batch` (reused inside fused jits)."""
+    B = need.shape[0]
     need = jnp.clip(need.astype(jnp.int32), 0, max_grow)
     end = jnp.cumsum(need)  # [B]
     start = end - need
     # prefix satisfaction: a row is granted iff every row before it (in batch
     # order) was, and its own grant still fits.  Because ``end`` is monotone,
     # once the pool runs dry every later needy row fails too — so a single
-    # pass assigns a contiguous run of popped pages.
-    sat = end <= pool.free_top
+    # segmented pop assigns a contiguous run of popped pages.
+    sat = end <= _free_total(pool)
     ok = jnp.all(sat | (need == 0))
+    total = jnp.sum(jnp.where(sat, need, 0))
+    pool, popped = _segmented_pop_impl(pool, total, B * max_grow)
     j = jnp.arange(max_grow, dtype=jnp.int32)[None, :]
     take = (j < need[:, None]) & sat[:, None]
-    idx = pool.free_top - 1 - (start[:, None] + j)
-    grants = jnp.where(
-        take & (idx >= 0), pool.free_stack[jnp.maximum(idx, 0)], -1
-    ).astype(jnp.int32)
-    granted = jnp.sum(jnp.where(sat, need, 0))
-    return pool._replace(free_top=pool.free_top - granted), grants, ok
+    lin = jnp.minimum(start[:, None] + j, B * max_grow - 1)
+    grants = jnp.where(take, popped[lin], -1).astype(jnp.int32)
+    return pool, grants, ok
 
 
 @functools.partial(jax.jit, static_argnums=2, donate_argnums=0)
@@ -80,11 +213,19 @@ def alloc_pages_batch(pool: PagePool, need: jax.Array, max_grow: int = 1):
     granted), ok).  Grants are assigned greedily in batch order; on
     exhaustion the satisfied prefix KEEPS its pages (so the batch still makes
     progress) and ``ok`` is False so the scheduler can reclaim (preempt a
-    victim) before the unsatisfied rows retry.  This replaces the per-page
-    ``alloc_pages(pool, 1)`` + ``bool(ok)`` host round-trip loop: one jitted
-    dispatch, zero host syncs, for the whole batch.
+    victim) or remap released superblocks before the unsatisfied rows retry.
+    Pages come from PARTIAL superblocks first (see :func:`_alloc_order`);
+    UNMAPPED superblocks never serve grants.  One jitted dispatch, zero host
+    syncs, for the whole batch.
     """
     return _alloc_pages_batch_impl(pool, need, max_grow)
+
+
+def _alloc_pages_impl(pool: PagePool, n: int):
+    ok = _free_total(pool) >= n
+    pool, pages = _segmented_pop_impl(
+        pool, jnp.where(ok, n, 0).astype(jnp.int32), n)
+    return pool, pages, ok
 
 
 @functools.partial(jax.jit, static_argnums=1, donate_argnums=0)
@@ -92,33 +233,43 @@ def alloc_pages(pool: PagePool, n: int):
     """Pop ``n`` pages.  Returns (pool, pages [n] int32, ok).
 
     On exhaustion (ok=False) no state changes and pages are -1 — the caller
-    (scheduler) must reclaim (preempt a victim) and retry, which mirrors the
-    allocator's fill-from-heap / trigger-reclamation path.
+    (scheduler) must reclaim (preempt a victim) or remap released
+    superblocks and retry, which mirrors the allocator's fill-from-heap /
+    trigger-reclamation path.
     """
-    top = pool.free_top
-    ok = top >= n
-    idx = top - 1 - jnp.arange(n, dtype=jnp.int32)
-    pages = jnp.where(
-        ok & (idx >= 0), pool.free_stack[jnp.maximum(idx, 0)], -1
-    ).astype(jnp.int32)
-    new_top = jnp.where(ok, top - n, top)
-    return pool._replace(free_top=new_top), pages, ok
+    return _alloc_pages_impl(pool, n)
+
+
+# ---------------------------------------------------------------------------
+# free: push each page back onto its HOME superblock's free list
 
 
 def _free_pages_impl(pool: PagePool, pages: jax.Array) -> PagePool:
     """Traceable body of :func:`free_pages` (reused inside fused jits)."""
+    pages = pages.reshape(-1).astype(jnp.int32)
+    n = pages.shape[0]
+    S, K = pool.sb_pages.shape
     valid = pages >= 0
-    npages = pool.free_stack.shape[0]
-    pos = pool.free_top + jnp.cumsum(valid.astype(jnp.int32)) - 1
-    slot = jnp.where(valid, pos, npages)  # OOB -> dropped
-    stack = pool.free_stack.at[slot].set(pages, mode="drop")
-    pidx = jnp.where(valid, pages, npages)
+    sb = jnp.where(valid, pages // K, S)  # S = OOB row -> dropped scatter
+    # position of each page within its superblock's push group: number of
+    # earlier valid pages in this batch bound for the same superblock
+    i = jnp.arange(n)
+    before = (sb[None, :] == sb[:, None]) & (i[None, :] < i[:, None]) & valid[None, :]
+    occ = jnp.sum(before, axis=1).astype(jnp.int32)
+    slot = pool.sb_free[jnp.minimum(sb, S - 1)] + occ
+    sb_lists = pool.sb_pages.at[sb, slot].set(pages, mode="drop")
+    freed = jnp.zeros((S,), jnp.int32).at[sb].add(
+        valid.astype(jnp.int32), mode="drop")
+    pidx = jnp.where(valid, pages, pool.num_pages)
     version = pool.page_version.at[pidx].add(1, mode="drop")
-    return PagePool(
-        free_stack=stack,
-        free_top=pool.free_top + jnp.sum(valid.astype(jnp.int32)),
+    # the warning fires only when something was actually reclaimed: an
+    # all-(-1) batch must not tick the clock (nor the engine's host mirror)
+    any_valid = jnp.any(valid)
+    return pool._replace(
+        sb_pages=sb_lists,
+        sb_free=pool.sb_free + freed,
         page_version=version,
-        clock=pool.clock + 1,
+        clock=pool.clock + any_valid.astype(jnp.uint32),
     )
 
 
@@ -126,8 +277,84 @@ def _free_pages_impl(pool: PagePool, pages: jax.Array) -> PagePool:
 def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
     """Push pages (−1 entries ignored) and fire the warning: each page's
     version bumps and the global clock ticks once per batch (one warning per
-    reclamation batch — Alg. 1/2's single barrier)."""
+    reclamation batch — Alg. 1/2's single barrier).  A batch with no real
+    pages is a no-op: the clock does NOT tick."""
     return _free_pages_impl(pool, pages)
+
+
+# ---------------------------------------------------------------------------
+# physical release accounting (paper §3.2, device edition)
+
+
+def _release_empty_impl(pool: PagePool, max_release: jax.Array,
+                        keep_mapped: jax.Array):
+    S, K = pool.sb_pages.shape
+    cap = _capacities(pool)
+    empty = pool.sb_mapped & (pool.sb_free >= cap)
+    mapped_count = jnp.sum(pool.sb_mapped.astype(jnp.int32))
+    quota = jnp.clip(
+        jnp.minimum(max_release, mapped_count - keep_mapped), 0, S)
+    # release highest-indexed empties first so allocation (which prefers
+    # low-indexed superblocks among equals) keeps the low region hot
+    from_top = jnp.cumsum(empty[::-1].astype(jnp.int32))[::-1]
+    release = empty & (from_top <= quota)
+    page_sb = jnp.arange(pool.num_pages, dtype=jnp.int32) // K
+    version = pool.page_version + release[page_sb].astype(jnp.uint32)
+    n_rel = jnp.sum(release.astype(jnp.int32))
+    pages_rel = jnp.sum(jnp.where(release, cap, 0)).astype(jnp.int32)
+    return (
+        pool._replace(
+            sb_mapped=pool.sb_mapped & ~release,
+            page_version=version,
+            clock=pool.clock + (n_rel > 0).astype(jnp.uint32),
+        ),
+        n_rel, pages_rel,
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def release_empty_superblocks(pool: PagePool, max_release: jax.Array,
+                              keep_mapped: jax.Array):
+    """Take up to ``max_release`` EMPTY superblocks out of circulation while
+    keeping at least ``keep_mapped`` superblocks mapped.
+
+    The device analogue of handing an empty superblock's frames back to the
+    OS (paper §3.2): released pages leave the free list (they can no longer
+    be granted), every released page's version bumps — so any in-flight
+    optimistic reader holding a snapshot over the released range fails OA
+    validation, exactly like a reader of a reclaimed node — and the clock
+    ticks once per non-empty release batch.  The KV arena itself stays
+    allocated (palloc: reads through stale block tables never fault).
+
+    Returns (pool, n_released [] int32, pages_released [] int32).  Only
+    FULL==0-live (i.e. EMPTY) superblocks are eligible, so a release can
+    never take a live page out from under a running request.
+    """
+    return _release_empty_impl(pool, max_release, keep_mapped)
+
+
+def _map_superblocks_impl(pool: PagePool, n: jax.Array):
+    cap = _capacities(pool)
+    unmapped = ~pool.sb_mapped
+    rk = jnp.cumsum(unmapped.astype(jnp.int32))  # 1-based rank among unmapped
+    take = unmapped & (rk <= n)
+    n_map = jnp.sum(take.astype(jnp.int32))
+    pages_map = jnp.sum(jnp.where(take, cap, 0)).astype(jnp.int32)
+    return pool._replace(sb_mapped=pool.sb_mapped | take), n_map, pages_map
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def map_superblocks(pool: PagePool, n: jax.Array):
+    """Bring up to ``n`` released superblocks back into circulation (lowest
+    index first).  Their pages re-enter the free lists as an EMPTY
+    superblock; versions were already bumped at release, so no stale
+    snapshot can survive a release/remap cycle.  Returns (pool, n_mapped []
+    int32, pages_mapped [] int32)."""
+    return _map_superblocks_impl(pool, n)
+
+
+# ---------------------------------------------------------------------------
+# OA snapshot / validate (unchanged by the superblock refactor)
 
 
 def _snapshot_impl(pool: PagePool, pages: jax.Array) -> jax.Array:
@@ -163,9 +390,10 @@ def validate_and_commit(pool: PagePool, pages: jax.Array, snapshot: jax.Array):
 @jax.jit
 def validate_read(pool: PagePool, pages: jax.Array, snapshot: jax.Array) -> jax.Array:
     """OA check: True iff none of ``pages`` were reclaimed since ``snapshot``.
-    (A reclaim bumps the version BEFORE the page can be re-allocated, so a
-    stale optimistic read is always caught — the warning-before-free order
-    of Alg. 1.)"""
+    (A reclaim bumps the version BEFORE the page can be re-allocated — and a
+    superblock release bumps it again BEFORE the range leaves circulation —
+    so a stale optimistic read is always caught — the warning-before-free
+    order of Alg. 1.)"""
     cur = jnp.where(pages >= 0, pool.page_version[jnp.maximum(pages, 0)], 0)
     return jnp.all(cur == snapshot)
 
@@ -177,7 +405,10 @@ def validate_read(pool: PagePool, pages: jax.Array, snapshot: jax.Array) -> jax.
 def kv_pages_init(num_pages: int, page_size: int, n_kv_heads: int, head_dim: int,
                   dtype=jnp.bfloat16):
     """The persistent KV arena: allocated once, never released (palloc).
-    Layout: [num_pages, page_size, n_kv_heads, head_dim] for each of k/v."""
+    Layout: [num_pages, page_size, n_kv_heads, head_dim] for each of k/v.
+    Superblock release is pure *accounting* on the pool — the arena keeps
+    every page addressable so optimistic reads through released ranges stay
+    safe (they fail validation instead of faulting)."""
     shape = (num_pages, page_size, n_kv_heads, head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 

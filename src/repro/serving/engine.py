@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine on the versioned page pool.
+"""Continuous-batching serving engine on the versioned superblock page pool.
 
 The OA story end-to-end (DESIGN.md §2):
 
@@ -15,18 +15,38 @@ The OA story end-to-end (DESIGN.md §2):
 - **hazard pointers**: pages a step *writes* (the append slot) belong to
   requests pinned in the running batch — the scheduler never frees those,
   which is the structural analogue of protect-then-validate-then-CAS.
+- **physical release** (paper §3.2, device edition): the pool is superblock-
+  structured; when whole superblocks fall EMPTY the engine can take them out
+  of circulation (``shrink()`` / the quiescence policy below) and bring them
+  back under admission pressure instead of preempting — the elastic arena
+  that lets the device hand KV memory between workloads.
 
 Hot-path contract (the point of this engine): block tables, lengths, the
 prompt buffer, the OA snapshot and the free pool are persistent DEVICE
 arrays updated functionally by ``fused_decode_step``; a steady-state decode
 step performs exactly ONE host transfer ([B] tokens + [B] valid + [B]
 grant-ok in a single ``device_get``) and zero host→device uploads.  The
-Python scheduler touches host state only on admission, preemption, and
-completion — the same amortization the paper applies to reclamation
-(validate once per batch, not once per page).
+Python scheduler touches host state only on admission, preemption,
+completion and explicit pool maintenance (shrink/remap) — the same
+amortization the paper applies to reclamation (validate once per batch, not
+once per page).
+
+Release / remap knobs (all host-side; the hot path never syncs for them):
+
+- ``pages_per_superblock``: pool granularity (LRMalloc superblock size).
+- ``release_strategy``: the shared ``core.vm.ReleaseStrategy`` vocabulary.
+  ``KEEP`` disables physical release (the paper's portable baseline: frames
+  stay with the process); ``MADVISE``/``SHARED_REMAP`` enable it — on the
+  device model both mean "take EMPTY superblocks out of circulation,
+  versions bumped" (the analogue of dropping frames while the range stays
+  readable).
+- ``release_quiescence``: after this many consecutive maintenance ticks with
+  no admission pressure, EMPTY superblocks above the floor are released
+  (``None`` = only explicit ``shrink()`` calls release).
+- ``min_mapped_superblocks``: floor of mapped superblocks a release keeps.
 
 Counters mirror the paper's: warnings fired (pool clock), reader restarts,
-preemptions, reclaimed pages.
+preemptions, reclaimed pages, superblocks released/remapped, mapped pages.
 """
 
 from __future__ import annotations
@@ -42,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pagepool as pp
+from repro.core.vm import ReleaseStrategy
 from .paged_decode import fused_decode_step, kv_storage_init
 
 
@@ -68,10 +89,23 @@ class Request:
     @property
     def pages(self) -> list[int]:
         """Physical page ids currently mapped (reads the device block table —
-        introspection/test helper, never called on the hot path)."""
-        if self.slot is None or self._engine is None:
+        introspection/test helper, never called on the hot path).
+
+        Robust against cleared slots: a request whose slot was released
+        (finish/preempt) — or whose old slot index now belongs to ANOTHER
+        request — reads as ``[]``, never a foreign or cleared block-table
+        row.  The row is materialised as a host copy and ownership is
+        re-checked after the device read, so a clear landing during the
+        transfer is detected; a consistent pre-clear snapshot may still be
+        returned, which is the strongest guarantee an unfenced observer of
+        an optimistic structure can have (the OA reader story again).
+        """
+        eng, slot = self._engine, self.slot
+        if slot is None or eng is None or eng._slots[slot] is not self:
             return []
-        row = np.asarray(self._engine._bt)[self.slot]
+        row = np.asarray(eng._bt)[slot]
+        if self.slot != slot or eng._slots[slot] is not self:
+            return []  # cleared mid-read: stale row, report nothing
         return [int(p) for p in row if p >= 0]
 
 
@@ -85,6 +119,13 @@ class EngineStats:
     pages_reclaimed: int = 0
     wall_seconds: float = 0.0
     tokens_per_second: float = 0.0
+    # superblock / physical-release accounting (paper §3.2, device edition)
+    superblocks_resident: int = 0  # arena footprint (constant: palloc'd once)
+    superblocks_mapped: int = 0  # currently in circulation
+    superblocks_released: int = 0  # cumulative releases
+    superblocks_remapped: int = 0  # cumulative remaps under pressure
+    mapped_pages: int = 0  # current allocatable capacity (free + held)
+    release_strategy: str = ReleaseStrategy.KEEP.value
 
 
 # -- jitted slot transitions (admission / release; no host syncs) -----------
@@ -133,7 +174,11 @@ class PagedServingEngine:
                  max_batch: int = 8, max_pages_per_seq: int | None = None,
                  attn_impl: str = "ref", greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
-                 pages_per_compute_block: int = 1):
+                 pages_per_compute_block: int = 1,
+                 pages_per_superblock: int = pp.DEFAULT_PAGES_PER_SUPERBLOCK,
+                 release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
+                 release_quiescence: int | None = None,
+                 min_mapped_superblocks: int = 1):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -141,7 +186,11 @@ class PagedServingEngine:
         self.max_batch = max_batch
         self.attn_impl = attn_impl
         self.pages_per_compute_block = pages_per_compute_block
-        self.pool = pp.pool_init(num_pages)
+        self.pool = pp.pool_init(num_pages, pages_per_superblock)
+        self.pages_per_superblock = self.pool.pages_per_superblock
+        self.release_strategy = release_strategy
+        self.release_quiescence = release_quiescence
+        self.min_mapped_superblocks = max(1, min_mapped_superblocks)
         self.kv = kv_storage_init(cfg, num_pages, page_size)
         self.max_pages_per_seq = max_pages_per_seq or num_pages
         self.queue: deque[Request] = deque()
@@ -153,6 +202,16 @@ class PagedServingEngine:
         self._step_idx = 0
         self._next_rid = itertools.count(1000)
         self._warning_batches = 0  # host mirror of pool.clock (no sync)
+        self._idle_ticks = 0  # consecutive maintenance ticks with no pressure
+
+        # host mirrors of the superblock anchors (updated only at the
+        # shrink/remap sync points, so the hot path stays transfer-free)
+        self._total_sbs = self.pool.num_superblocks
+        self._mapped_sbs = self._total_sbs
+        self._mapped_pages = num_pages
+        self.stats.superblocks_resident = self._total_sbs
+        self.stats.release_strategy = release_strategy.value
+        self._sync_sb_stats()
 
         # persistent device-side batch state
         B, M = max_batch, self.max_pages_per_seq
@@ -167,6 +226,10 @@ class PagedServingEngine:
         self._slots: list[Request | None] = [None] * B
 
     # -- page accounting --------------------------------------------------------
+
+    def _sync_sb_stats(self) -> None:
+        self.stats.superblocks_mapped = self._mapped_sbs
+        self.stats.mapped_pages = self._mapped_pages
 
     def _pick_victim(self, exclude: Request | None = None):
         cands = [r for r in self.running if r is not exclude]
@@ -210,12 +273,83 @@ class PagedServingEngine:
              self._active) = _release_slot(
                 self.pool, self._bt, self._snap, self._len, self._last,
                 self._active, req.slot)
-            self._warning_batches += 1  # free_pages ticks the clock once
-            self.stats.warnings_fired = self._warning_batches
+            if req.pages_held > 0:
+                # the clock ticks only when real pages were freed — keep the
+                # host mirror on the same rule (an admitted slot always holds
+                # >= 1 page, but the guard keeps the mirror safe by design)
+                self._warning_batches += 1
+                self.stats.warnings_fired = self._warning_batches
             self.stats.pages_reclaimed += req.pages_held
         self._slots[req.slot] = None
         req.slot = None
         req.pages_held = 0
+
+    # -- physical release / remap (paper §3.2 on the device pool) ---------------
+
+    def shrink(self, keep_superblocks: int | None = None) -> int:
+        """Release every EMPTY superblock above the floor from circulation.
+
+        An explicit maintenance sync point (like admission): returns the
+        number of superblocks released and updates the host mirrors.  Under
+        ``ReleaseStrategy.KEEP`` this is a no-op — the paper's portable
+        baseline recycles within the process but never releases.
+        """
+        if self.release_strategy is ReleaseStrategy.KEEP:
+            return 0
+        keep = (self.min_mapped_superblocks if keep_superblocks is None
+                else max(1, keep_superblocks))
+        self.pool, n_sb, n_pg = pp.release_empty_superblocks(
+            self.pool, jnp.asarray(self._total_sbs, jnp.int32),
+            jnp.asarray(keep, jnp.int32))
+        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
+        if got_sb > 0:
+            self._mapped_sbs -= got_sb
+            self._mapped_pages -= got_pg
+            self.stats.superblocks_released += got_sb
+            self._warning_batches += 1  # release ticks the clock once
+            self.stats.warnings_fired = self._warning_batches
+            self._sync_sb_stats()
+        return got_sb
+
+    def _remap_for(self, need_pages: int) -> bool:
+        """Bring released superblocks back into circulation to cover
+        ``need_pages`` more pages.  Returns True if any superblock was
+        remapped.  Preferred over preemption during admission: remapping
+        costs no running request anything."""
+        if self._mapped_sbs >= self._total_sbs or need_pages <= 0:
+            return False
+        want_sbs = -(-need_pages // self.pages_per_superblock)
+        self.pool, n_sb, n_pg = pp.map_superblocks(
+            self.pool, jnp.asarray(want_sbs, jnp.int32))
+        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
+        if got_sb > 0:
+            self._mapped_sbs += got_sb
+            self._mapped_pages += got_pg
+            self.stats.superblocks_remapped += got_sb
+            self._sync_sb_stats()
+        return got_sb > 0
+
+    def _maintain(self) -> None:
+        """Quiescence-driven release tick (called from ``run``; an allowed
+        host sync point, never part of the fused step)."""
+        if (self.release_quiescence is None
+                or self.release_strategy is ReleaseStrategy.KEEP):
+            return
+        if self.queue:
+            self._idle_ticks = 0  # admission pressure: not quiescent
+            return
+        self._idle_ticks += 1
+        if self._idle_ticks < self.release_quiescence:
+            return
+        self._idle_ticks = 0
+        # release only capacity no running request can ever demand again, so
+        # a mid-burst shrink never ping-pongs with the growth path's remap
+        ps = self.page_size
+        demand = sum((r.target_len + ps - 1) // ps for r in self.running)
+        keep = max(self.min_mapped_superblocks,
+                   -(-demand // self.pages_per_superblock))
+        if self._mapped_sbs > keep:  # anything releasable? (host-side check)
+            self.shrink(keep_superblocks=keep)
 
     # -- scheduling -------------------------------------------------------------
 
@@ -247,16 +381,25 @@ class PagedServingEngine:
             # first claim on the free pool.  Without this, admission can keep
             # stealing the page a preemption just freed for a starved row —
             # an admit/starve/preempt livelock.  (Host-side arithmetic only:
-            # pages_held mirrors the device grants, so no sync.)
+            # pages_held and _mapped_pages mirror the device anchors, so no
+            # sync.)  When mapped capacity is short but released superblocks
+            # exist, remap them instead of refusing/preempting.
             held = sum(r.pages_held for r in self.running)
             need_now = sum(1 for r in self.running
                            if (r.committed // self.page_size) >= r.pages_held)
-            if self.num_pages - held - need_now < 1:
-                break
+            short = 1 + held + need_now - self._mapped_pages
+            if short > 0:
+                self._remap_for(short)
+                if 1 + held + need_now - self._mapped_pages > 0:
+                    break  # remap (if any) fell short: a partial remap must
+                    # not let admission steal a starved row's page
             while True:
                 self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
                 if bool(ok):
                     break
+                # released memory covers the need? remap before preempting
+                if self._remap_for(1):
+                    continue
                 victim = self._pick_victim(exclude=req)
                 if victim is None:
                     return  # req waits for memory
@@ -284,7 +427,11 @@ class PagedServingEngine:
         """Evict to unblock ``starved`` rows: prefer the youngest NON-starved
         request (evicting a starved row would restart the work we are trying
         to unblock); if every running row is starved, evict the youngest of
-        those — it both frees pages and withdraws its own demand."""
+        those — it both frees pages and withdraws its own demand.  Remap is
+        tried first: released superblocks cover starvation without costing
+        any running request its work."""
+        if self._remap_for(len(starved)):
+            return True
         cands = [r for r in self.running if r not in starved] or self.running
         if not cands:
             return False
@@ -305,8 +452,9 @@ class PagedServingEngine:
         """
         assert req in self.running and req.slot is not None
         self.pool = pp.free_pages(self.pool, self._bt[req.slot])
-        self._warning_batches += 1
-        self.stats.warnings_fired = self._warning_batches
+        if req.pages_held > 0:  # clock ticks only for real reclamation
+            self._warning_batches += 1
+            self.stats.warnings_fired = self._warning_batches
         self.stats.pages_reclaimed += req.pages_held
         req.externally_reclaimed = True
         req.reclaim_watermark = req.pages_held
@@ -388,6 +536,9 @@ class PagedServingEngine:
             if not self.running:  # queue blocked on memory: forced preemption failed
                 raise MemoryError("pool exhausted with empty running set")
             self.step()
+            self._maintain()
+        if self.release_quiescence is not None:
+            self.shrink()  # drain: park the now-idle superblocks
         self.stats.wall_seconds = time.time() - t0
         self.stats.tokens_per_second = (
             self.stats.tokens_committed / self.stats.wall_seconds

@@ -17,6 +17,12 @@ Two entry points:
   valid-rows — not logits [B, vocab] plus two version arrays.  This is the
   paper's amortization argument applied to the decode loop: the version
   check is cheap because it is batched and fused with the read it guards.
+
+The pool is superblock-structured (``core/pagepool.py``): the batched grant
+is a one-pass segmented pop that prefers PARTIAL superblocks and never
+touches UNMAPPED (physically released) ones — the anchor walk happens
+inside the same fused dispatch, so the anti-fragmentation and release
+machinery costs the hot path zero extra host syncs.
 """
 
 from __future__ import annotations

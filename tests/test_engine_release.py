@@ -1,0 +1,166 @@
+"""Engine-level physical release: shrink() parks EMPTY superblocks, admission
+remaps instead of preempting, host mirrors stay consistent with the device
+clock, and Request.pages is robust to slots cleared mid-read."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import pagepool as pp
+from repro.core.vm import ReleaseStrategy
+from repro.serving import PagedServingEngine
+
+CFG = reduced(get_config("olmo-1b"))
+
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import build_model
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("num_pages", 32)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_pages_per_seq", 8)
+    kw.setdefault("pages_per_superblock", 4)
+    return PagedServingEngine(CFG, params, **kw)
+
+
+def test_shrink_after_drain_releases_superblocks(params):
+    eng = _engine(params)
+    r = eng.submit([5, 9, 13], 6)
+    eng.run()
+    assert r.state == "finished"
+    assert eng.stats.superblocks_mapped == eng.stats.superblocks_resident == 8
+    released = eng.shrink()
+    assert released == 7  # everything empty above the floor of 1
+    assert eng.stats.superblocks_mapped == 1
+    assert eng.stats.superblocks_released == 7
+    assert eng.stats.mapped_pages == 4
+    # host mirrors agree with the device anchors
+    assert int(eng.pool.free_top) == eng.stats.mapped_pages
+    assert int(np.sum(np.asarray(eng.pool.sb_mapped))) == 1
+
+
+def test_engine_remaps_under_pressure_instead_of_preempting(params):
+    eng = _engine(params)
+    eng.submit([5, 9, 13], 6)
+    eng.run()
+    eng.shrink()
+    assert eng.stats.superblocks_mapped == 1
+    # this request needs 5 pages > the 4-page mapped floor; mid-decode page
+    # growth must remap released superblocks instead of starving/preempting
+    r = eng.submit([3, 4, 5, 6], 16)
+    eng.run()
+    assert r.state == "finished"
+    assert eng.stats.superblocks_remapped > 0
+    assert eng.stats.preemptions == 0, "remap must cover the need"
+
+
+def test_generation_unchanged_across_release_cycles(params):
+    """Releasing + remapping between requests must not change outputs."""
+    plain = _engine(params)
+    a = plain.submit([5, 9, 13], 6)
+    plain.run()
+    cycled = _engine(params)
+    for _ in range(2):  # churn the mapped set before serving
+        cycled.shrink()
+        b = cycled.submit([5, 9, 13], 6)
+        cycled.run()
+        assert b.state == "finished"
+        assert b.generated == a.generated
+
+
+def test_quiescence_policy_releases_and_run_drain_shrinks(params):
+    eng = _engine(params, release_quiescence=2)
+    r = eng.submit([5, 9, 13], 4)
+    eng.run()
+    assert r.state == "finished"
+    # the drain shrink at the end of run() parked the idle superblocks
+    assert eng.stats.superblocks_mapped == 1
+    assert eng.stats.superblocks_released >= 7
+
+
+def test_keep_strategy_never_releases(params):
+    eng = _engine(params, release_strategy=ReleaseStrategy.KEEP,
+                  release_quiescence=1)
+    r = eng.submit([5, 9, 13], 4)
+    eng.run()
+    assert r.state == "finished"
+    assert eng.shrink() == 0
+    assert eng.stats.superblocks_released == 0
+    assert eng.stats.superblocks_mapped == eng.stats.superblocks_resident
+    assert eng.stats.release_strategy == "keep"
+
+
+def test_warning_mirror_tracks_device_clock(params):
+    """Satellite: ``warnings_fired`` (the host mirror of pool.clock) must
+    equal the device clock after any mix of frees, releases and remaps —
+    including batches that free nothing."""
+    eng = _engine(params)
+    reqs = [eng.submit(p, 4) for p in ([5, 9, 13], [7, 11])]
+    eng.run()
+    eng.shrink()
+    eng.submit([3, 4, 5], 4)
+    eng.run()
+    eng.shrink()
+    assert all(r.state == "finished" for r in reqs)
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+    # an empty free batch moves neither side
+    before = eng.stats.warnings_fired
+    eng.pool = pp.free_pages(eng.pool, np.full((4,), -1, np.int32))
+    assert int(eng.pool.clock) == before
+
+
+def test_request_pages_returns_empty_after_slot_cleared(params):
+    """Satellite regression: a Request whose slot was cleared (finish or
+    preempt) — or whose slot now belongs to ANOTHER request — must report
+    ``[]``, never a stale or foreign block-table row."""
+    eng = _engine(params)
+    r1 = eng.submit([5, 9, 13], 4)
+    eng._admit()
+    assert len(r1.pages) >= 1
+    eng.run()
+    assert r1.state == "finished"
+    assert r1.pages == []
+    # stale-binding case: fake a dangling slot index pointing at a row that
+    # has been handed to another request
+    r2 = eng.submit([7, 11], 4)
+    eng._admit()
+    r1.slot = r2.slot  # dangling observer from a cleared request
+    try:
+        assert r1.pages == [], "stale slot must not leak another row"
+        assert len(r2.pages) >= 1
+    finally:
+        r1.slot = None
+    eng.run()
+    assert r2.state == "finished"
+
+
+def test_sync_free_hot_path_survives_release_machinery(params):
+    """The release refactor must not add host transfers to steady-state
+    steps (the one-device_get invariant lives in test_sync_free.py; this is
+    the cheaper engine-local guard: no maintenance syncs while running)."""
+    eng = _engine(params, release_quiescence=1000)
+    eng.submit(list(range(1, 5)), 10)
+    eng._admit()
+    for _ in range(3):
+        eng.step()
+    calls = {"n": 0}
+    orig = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return orig(x)
+
+    jax.device_get = counting
+    try:
+        for _ in range(4):
+            eng.step()
+            eng._maintain()
+    finally:
+        jax.device_get = orig
+    assert calls["n"] <= 4, f"{calls['n']} transfers in 4 steps"

@@ -100,6 +100,54 @@ def test_versions_monotone(nfree):
     assert (v1[:2] > v0[:2]).all()
 
 
+@given(st.data())
+@settings(**SETTINGS)
+def test_superblock_interleavings_never_dup_or_leak_unmapped(data):
+    """Any interleaving of alloc_pages_batch / free_pages /
+    release_empty_superblocks / map_superblocks never duplicates a live page
+    id and never hands out a page from an unmapped superblock."""
+    npages = data.draw(st.integers(4, 24))
+    K = data.draw(st.integers(1, 6))
+    pool = pp.pool_init(npages, pages_per_superblock=K)
+    K = pool.pages_per_superblock  # pool_init clamps K to the pool size
+    S = pool.num_superblocks
+    caps = [min(K, npages - s * K) for s in range(S)]
+    live: set[int] = set()
+    for _ in range(data.draw(st.integers(1, 25))):
+        op = data.draw(st.sampled_from(["alloc", "free", "release", "map"]))
+        if op == "alloc":
+            B = data.draw(st.integers(1, 4))
+            need = jnp.asarray(
+                [data.draw(st.integers(0, 2)) for _ in range(B)], jnp.int32)
+            pool, grants, _ = pp.alloc_pages_batch(pool, need, 2)
+            got = [int(p) for p in np.asarray(grants).ravel() if p >= 0]
+            mapped = set(np.flatnonzero(np.asarray(pool.sb_mapped)).tolist())
+            assert len(got) == len(set(got)), "duplicate grant within batch"
+            for p in got:
+                assert p not in live, "double allocation of a live page"
+                assert p // K in mapped, "grant from an unmapped superblock"
+            live.update(got)
+        elif op == "free" and live:
+            k = data.draw(st.integers(1, len(live)))
+            batch = [live.pop() for _ in range(k)]
+            pool = pp.free_pages(pool, jnp.asarray(batch, jnp.int32))
+        elif op == "release":
+            pool, _, _ = pp.release_empty_superblocks(
+                pool,
+                jnp.asarray(data.draw(st.integers(0, S)), jnp.int32),
+                jnp.asarray(data.draw(st.integers(0, S)), jnp.int32))
+        elif op == "map":
+            pool, _, _ = pp.map_superblocks(
+                pool, jnp.asarray(data.draw(st.integers(0, S)), jnp.int32))
+        # live pages always sit in mapped superblocks (release only takes
+        # EMPTY superblocks, which by definition hold no live page)
+        mapped = set(np.flatnonzero(np.asarray(pool.sb_mapped)).tolist())
+        for p in live:
+            assert p // K in mapped, "release unmapped a live page"
+        expect_free = sum(caps[s] for s in mapped) - len(live)
+        assert int(pool.free_top) == expect_free
+
+
 def test_append_and_gather_roundtrip():
     kv = pp.kv_pages_init(8, 4, 2, 8, dtype=jnp.float32)
     bt = jnp.array([[2, 5, -1, -1]], jnp.int32)

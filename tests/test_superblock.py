@@ -1,0 +1,207 @@
+"""Superblock-structured device pool: anchors, PARTIAL-first allocation,
+physical release accounting (release/map), OA validation across a release.
+Hypothesis-free so a bare environment still exercises the superblock layer
+(the interleaving property test lives in test_pagepool.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pagepool as pp
+from repro.core.vm import ReleaseStrategy  # noqa: F401 — shared vocabulary
+
+
+def _states(pool):
+    return np.asarray(pp.superblock_states(pool)).tolist()
+
+
+def test_pool_init_superblock_layout():
+    pool = pp.pool_init(16, 4)
+    assert pool.num_superblocks == 4
+    assert pool.pages_per_superblock == 4
+    assert int(pool.free_top) == 16
+    assert _states(pool) == [pp.SB_EMPTY] * 4
+    # every page appears exactly once, in its home superblock's list
+    ids = np.asarray(pool.sb_pages)
+    assert sorted(ids.ravel().tolist()) == list(range(16))
+    for s in range(4):
+        assert all(p // 4 == s for p in ids[s])
+
+
+def test_ragged_last_superblock():
+    pool = pp.pool_init(10, 4)
+    assert pool.num_superblocks == 3
+    assert int(pool.free_top) == 10
+    pool, pages, ok = pp.alloc_pages(pool, 10)
+    assert bool(ok)
+    assert sorted(np.asarray(pages).tolist()) == list(range(10))
+    assert _states(pool) == [pp.SB_FULL] * 3
+    pool = pp.free_pages(pool, pages)
+    assert _states(pool) == [pp.SB_EMPTY] * 3
+
+
+def test_anchor_state_transitions():
+    """FULL -> PARTIAL -> EMPTY, LRMalloc Fig. 2 on device anchors."""
+    pool = pp.pool_init(8, 4)
+    pool, a, _ = pp.alloc_pages(pool, 4)  # fills one superblock
+    st = _states(pool)
+    assert sorted(st) == [pp.SB_FULL, pp.SB_EMPTY]
+    full_sb = st.index(pp.SB_FULL)
+    pool = pp.free_pages(pool, a[:2])
+    assert _states(pool)[full_sb] == pp.SB_PARTIAL
+    pool = pp.free_pages(pool, a[2:])
+    assert _states(pool)[full_sb] == pp.SB_EMPTY
+
+
+def test_alloc_prefers_partial_over_empty():
+    """The anti-fragmentation policy: a PARTIAL superblock serves the grant
+    even when EMPTY superblocks exist, so frees coalesce into EMPTYs."""
+    pool = pp.pool_init(16, 4)
+    pool, pages, _ = pp.alloc_pages(pool, 16)
+    # sb2 becomes EMPTY, sb1 PARTIAL (2 free)
+    pool = pp.free_pages(pool, jnp.arange(8, 12, dtype=jnp.int32))
+    pool = pp.free_pages(pool, jnp.arange(4, 6, dtype=jnp.int32))
+    pool, g, ok = pp.alloc_pages(pool, 1)
+    assert bool(ok) and int(g[0]) // 4 == 1, "grant must come from the PARTIAL"
+    # the partial drains before the empty is touched
+    pool, g2, _ = pp.alloc_pages(pool, 1)
+    assert int(g2[0]) // 4 == 1
+    pool, g3, _ = pp.alloc_pages(pool, 1)
+    assert int(g3[0]) // 4 == 2  # only now the EMPTY superblock opens
+
+
+def test_fullest_partial_first_packs():
+    """Among PARTIALs the fullest (fewest free pages) serves first, packing
+    allocations into as few superblocks as possible."""
+    pool = pp.pool_init(12, 4)
+    pool, pages, _ = pp.alloc_pages(pool, 12)
+    pool = pp.free_pages(pool, jnp.asarray([0], jnp.int32))  # sb0: 1 free
+    pool = pp.free_pages(pool, jnp.asarray([4, 5, 6], jnp.int32))  # sb1: 3 free
+    pool, g, _ = pp.alloc_pages(pool, 1)
+    assert int(g[0]) // 4 == 0, "fullest partial (sb0) must serve first"
+
+
+def test_release_empty_superblocks_accounting():
+    pool = pp.pool_init(16, 4)
+    pool, n, npg = pp.release_empty_superblocks(
+        pool, jnp.asarray(16, jnp.int32), jnp.asarray(1, jnp.int32))
+    assert int(n) == 3 and int(npg) == 12
+    assert int(pool.free_top) == 4
+    assert _states(pool) == [pp.SB_EMPTY] + [pp.SB_UNMAPPED] * 3
+    # released pages are out of circulation: overallocation fails cleanly
+    pool, pages, ok = pp.alloc_pages(pool, 5)
+    assert not bool(ok) and int(pool.free_top) == 4
+    # the clock ticked once for the release batch
+    assert int(pool.clock) == 1
+
+
+def test_release_respects_keep_mapped_floor_and_quota():
+    pool = pp.pool_init(16, 4)
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(1, jnp.int32), jnp.asarray(1, jnp.int32))
+    assert int(n) == 1  # quota caps the batch
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(16, jnp.int32), jnp.asarray(2, jnp.int32))
+    assert int(n) == 1  # floor of 2 mapped superblocks holds
+    assert int(jnp.sum(pool.sb_mapped)) == 2
+
+
+def test_release_never_touches_live_pages():
+    """Only EMPTY superblocks are eligible: a PARTIAL/FULL superblock (live
+    pages) survives any release request."""
+    pool = pp.pool_init(16, 4)
+    pool, held, _ = pp.alloc_pages(pool, 2)  # sb with live pages
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(16, jnp.int32), jnp.asarray(0, jnp.int32))
+    live_sb = int(held[0]) // 4
+    assert bool(pool.sb_mapped[live_sb])
+    assert int(n) == 3
+    # the live pages still validate: their versions did not move
+    snap = pp.snapshot_versions(pool, held)
+    assert bool(pp.validate_read(pool, held, snap))
+
+
+def test_release_bumps_versions_catches_inflight_reader():
+    """The OA warning across a release: a reader holding a snapshot over
+    pages whose superblock is released must fail validation (the device
+    analogue of reading frames that were handed back)."""
+    pool = pp.pool_init(8, 4)
+    pool, pages, _ = pp.alloc_pages(pool, 2)
+    snap = pp.snapshot_versions(pool, pages)
+    pool = pp.free_pages(pool, pages)  # superblock back to EMPTY
+    snap2 = pp.snapshot_versions(pool, pages)
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(8, jnp.int32), jnp.asarray(0, jnp.int32))
+    assert int(n) == 2  # keep_mapped=0: the snapshotted range is released too
+    assert not bool(pp.validate_read(pool, pages, snap))
+    assert not bool(pp.validate_read(pool, pages, snap2)), \
+        "release itself must bump versions (warning-before-release order)"
+
+
+def test_map_superblocks_restores_circulation():
+    pool = pp.pool_init(16, 4)
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(16, jnp.int32), jnp.asarray(1, jnp.int32))
+    assert int(n) == 3
+    pool, nm, npm = pp.map_superblocks(pool, jnp.asarray(2, jnp.int32))
+    assert int(nm) == 2 and int(npm) == 8
+    assert int(pool.free_top) == 12
+    pool, pages, ok = pp.alloc_pages(pool, 12)
+    got = np.asarray(pages).tolist()
+    assert bool(ok) and len(set(got)) == 12
+    # mapping more than exist is clamped
+    pool, nm, _ = pp.map_superblocks(pool, jnp.asarray(99, jnp.int32))
+    assert int(nm) == 1
+    assert int(jnp.sum(pool.sb_mapped)) == 4
+
+
+def test_release_map_cycle_never_duplicates_pages():
+    pool = pp.pool_init(16, 4)
+    pool, live, _ = pp.alloc_pages(pool, 3)
+    for _ in range(3):
+        pool, _, _ = pp.release_empty_superblocks(
+            pool, jnp.asarray(16, jnp.int32), jnp.asarray(1, jnp.int32))
+        pool, _, _ = pp.map_superblocks(pool, jnp.asarray(16, jnp.int32))
+    pool, rest, ok = pp.alloc_pages(pool, 13)
+    assert bool(ok)
+    ids = np.asarray(live).tolist() + np.asarray(rest).tolist()
+    assert sorted(ids) == list(range(16))
+
+
+def test_batch_alloc_never_grants_from_unmapped():
+    pool = pp.pool_init(16, 4)
+    pool, n, _ = pp.release_empty_superblocks(
+        pool, jnp.asarray(2, jnp.int32), jnp.asarray(1, jnp.int32))
+    assert int(n) == 2
+    mapped = {s for s in range(4) if bool(pool.sb_mapped[s])}
+    pool, grants, ok = pp.alloc_pages_batch(
+        pool, jnp.asarray([2, 2, 2, 2], jnp.int32), 2)
+    g = [int(p) for p in np.asarray(grants).ravel() if p >= 0]
+    assert len(g) == len(set(g)) == 8  # exactly the two mapped superblocks
+    assert all(p // 4 in mapped for p in g)
+    assert bool(ok)
+
+
+def test_free_of_only_unmapped_entries_does_not_tick_clock():
+    """Satellite: an all-(-1) free batch is a no-op — no clock tick, no
+    version bumps, no free-list change."""
+    pool = pp.pool_init(8, 4)
+    pool, pages, _ = pp.alloc_pages(pool, 2)
+    clock0 = int(pool.clock)
+    top0 = int(pool.free_top)
+    vers0 = np.asarray(pool.page_version).copy()
+    pool = pp.free_pages(pool, jnp.full((5,), -1, jnp.int32))
+    assert int(pool.clock) == clock0
+    assert int(pool.free_top) == top0
+    np.testing.assert_array_equal(np.asarray(pool.page_version), vers0)
+    # a mixed batch still ticks exactly once
+    pool = pp.free_pages(
+        pool, jnp.asarray([int(pages[0]), -1, -1], jnp.int32))
+    assert int(pool.clock) == clock0 + 1
+
+
+def test_free_top_property_matches_flat_pool_view():
+    pool = pp.pool_init(10, 4)
+    pool, a, _ = pp.alloc_pages(pool, 7)
+    assert int(pool.free_top) == 3
+    pool = pp.free_pages(pool, a[:4])
+    assert int(pool.free_top) == 7
