@@ -1,0 +1,142 @@
+"""Prefix-sharing throughput: refcounted prompt-prefix cache on vs off.
+
+The multi-tenant serving shape: every request carries the same 64-token
+system prompt plus a short distinct user suffix.  Without sharing each
+request replays the full prompt (64+ prefill steps) and allocates its own
+copy of the prefix pages.  With ``prefix_cache=True`` the first wave's
+finish donates the prefix pages to the index; every later admission matches
+them, bumps refcounts instead of allocating, and starts decode past the
+prefix — the hybrid reclamation/allocation system of the paper turned into
+a serving win.
+
+Workload: ``N_REQUESTS`` requests through a batch-8 engine, submitted
+upfront so waves overlap exactly as continuous batching schedules them.
+Both engines run the identical model/config/workload; the measured ratio
+isolates the sharing layer.  The hot path is untouched: steady-state decode
+is still ONE fused dispatch + one ``device_get`` per step
+(tests/test_sync_free.py), sharing only changes what admission grants.
+
+Emits ``BENCH_prefix.json`` with the two gates ``benchmarks/run.py --check``
+enforces: >= 1.3x generated tokens/sec and >= 30% fewer page allocations at
+batch 8 with the shared 64-token prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+BATCH = 8
+PAGE_SIZE = 4
+SYS_LEN = 64  # the shared system prompt (16 pages)
+USER_LEN = 8
+NUM_PAGES = 256  # ample: the comparison isolates sharing, not preemption
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_prefix.json"
+
+
+def _workload(n_requests: int, max_new: int, seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, 500, (SYS_LEN,)).tolist()
+    return [(system + rng.integers(1, 500, (USER_LEN,)).tolist(), max_new)
+            for _ in range(n_requests)]
+
+
+def _drive(params, cfg, reqs, *, prefix_cache: bool):
+    eng = PagedServingEngine(
+        cfg, params, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+        max_batch=BATCH,
+        max_pages_per_seq=(SYS_LEN + USER_LEN) // PAGE_SIZE + 8,
+        prefix_cache=prefix_cache)
+    handles = [eng.submit(p, n) for p, n in reqs]
+    stats = eng.run()
+    assert all(r.state == "finished" for r in handles)
+    gen_tokens = sum(len(r.generated) for r in handles)
+    return eng, stats, gen_tokens
+
+
+def run(quick: bool = True):
+    cfg = dataclasses.replace(reduced(get_config("olmo-1b")), n_layers=1)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n_requests = 24 if quick else 64
+    max_new = 16 if quick else 32
+    reqs = _workload(n_requests, max_new)
+
+    # warmup both engines (compile) before timing
+    _drive(params, cfg, reqs, prefix_cache=True)
+    _drive(params, cfg, reqs, prefix_cache=False)
+
+    # interleaved best-of-N: min-time filters shared-CPU scheduler noise
+    reps = 3 if quick else 5
+    best = {}
+    for _ in range(reps):
+        for on in (True, False):
+            eng, stats, gen = _drive(params, cfg, reqs, prefix_cache=on)
+            tps = gen / max(stats.wall_seconds, 1e-9)
+            if on not in best or tps > best[on][0]:
+                best[on] = (tps, stats, gen)
+
+    tps_on, s_on, gen_on = best[True]
+    tps_off, s_off, gen_off = best[False]
+    assert gen_on == gen_off  # identical workload either way
+    speedup = tps_on / tps_off
+    alloc_ratio = s_on.pages_allocated / max(s_off.pages_allocated, 1)
+
+    record = {
+        "workload": {
+            "batch": BATCH, "page_size": PAGE_SIZE,
+            "n_requests": n_requests, "shared_prefix_tokens": SYS_LEN,
+            "user_suffix_tokens": USER_LEN, "max_new": max_new,
+            "num_pages": NUM_PAGES, "quick": quick,
+        },
+        "shared": {
+            "gen_tokens_per_second": round(tps_on, 1),
+            "generated_tokens": gen_on,
+            "steps": s_on.steps,
+            "pages_allocated": s_on.pages_allocated,
+            "prefix_hits": s_on.prefix_hits,
+            "prefix_tokens_reused": s_on.prefix_tokens_reused,
+            "cow_copies": s_on.cow_copies,
+            "prefix_cache_pages": s_on.prefix_cache_pages,
+            "prefix_evictions": s_on.prefix_evictions,
+            "preemptions": s_on.preemptions,
+            "wall_seconds": round(s_on.wall_seconds, 3),
+        },
+        "unshared": {
+            "gen_tokens_per_second": round(tps_off, 1),
+            "generated_tokens": gen_off,
+            "steps": s_off.steps,
+            "pages_allocated": s_off.pages_allocated,
+            "preemptions": s_off.preemptions,
+            "wall_seconds": round(s_off.wall_seconds, 3),
+        },
+        "speedup": round(speedup, 2),
+        "alloc_ratio": round(alloc_ratio, 3),
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+
+    return [
+        {"bench": "prefix_cache", "method": "shared",
+         "gen_tokens_per_second": round(tps_on, 1), "steps": s_on.steps,
+         "pages_allocated": s_on.pages_allocated,
+         "prefix_hits": s_on.prefix_hits,
+         "prefix_tokens_reused": s_on.prefix_tokens_reused},
+        {"bench": "prefix_cache", "method": "unshared",
+         "gen_tokens_per_second": round(tps_off, 1), "steps": s_off.steps,
+         "pages_allocated": s_off.pages_allocated},
+        {"bench": "prefix_cache", "method": "speedup",
+         "speedup_x": round(speedup, 2),
+         "alloc_ratio": round(alloc_ratio, 3)},
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -56,6 +56,21 @@ def _checks(all_rows) -> bool:
               f"(got {x}x),{'PASS' if passed else 'FAIL'}")
         ok &= passed
 
+    # prefix-sharing gates (BENCH_prefix.json): the refcounted cache must
+    # pay for itself on the shared-system-prompt workload
+    pc = [r for r in all_rows
+          if r["bench"] == "prefix_cache" and r["method"] == "speedup"]
+    if pc:
+        x, ar = pc[0]["speedup_x"], pc[0]["alloc_ratio"]
+        passed = x >= 1.3
+        print(f"check,prefix_cache: sharing >=1.3x gen tokens/sec "
+              f"(got {x}x),{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+        passed = ar <= 0.7
+        print(f"check,prefix_cache: >=30% fewer page allocations "
+              f"(got ratio {ar}),{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+
     mr = [r for r in all_rows if r["bench"] == "memory_release"]
     for r in mr:
         # every released persistent superblock (64 KiB) must actually leave
@@ -106,7 +121,7 @@ def main() -> None:
     quick = not args.paper_scale
 
     from . import (decode_throughput, hash_table, linked_list, memory_release,
-                   memory_release_device, paged_attention_bench)
+                   memory_release_device, paged_attention_bench, prefix_cache)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -115,11 +130,13 @@ def main() -> None:
         (memory_release_device, "fig3_device_memory_release"),
         (paged_attention_bench, "device_paged_attention"),
         (decode_throughput, "decode_throughput"),
+        (prefix_cache, "prefix_cache_sharing"),
     ]
     if args.check:  # the BENCH-gated subset only
         suite = [
             (memory_release_device, "fig3_device_memory_release"),
             (decode_throughput, "decode_throughput"),
+            (prefix_cache, "prefix_cache_sharing"),
         ]
 
     all_rows = []

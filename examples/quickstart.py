@@ -4,10 +4,14 @@
    a real mmap arena — frees release physical frames while the ranges stay
    readable.
 2. Device layer (the TPU adaptation): a paged-KV serving engine whose
-   preemption path is optimistic reclamation with version validation.
+   preemption path is optimistic reclamation with version validation, and
+   whose prefix cache shares prompt KV pages across requests by refcount.
 3. A tiny training run through the same substrate a 72B config would use.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+Every demo takes scale arguments so the smoke test
+(tests/test_examples.py) can run them near-instantly.
 """
 
 import jax
@@ -21,17 +25,17 @@ from repro.models import build_model
 from repro.serving import PagedServingEngine
 
 
-def host_layer_demo():
+def host_layer_demo(n_keys: int = 3000):
     print("== host layer: OA-VER over palloc, frames released to the OS ==")
     alloc = LRMalloc(num_superblocks=128, superblock_size=64 * 1024,
                      strategy=ReleaseStrategy.SHARED_REMAP)
     rec = OAVer(alloc, limbo_threshold=32)
     lst = HarrisMichaelList(rec)
     ctx = rec.thread_ctx()
-    for k in range(1, 3000):
+    for k in range(1, n_keys):
         lst.insert(k, ctx)
     before = alloc.resident_bytes()
-    for k in range(1, 3000):
+    for k in range(1, n_keys):
         lst.delete(k, ctx)
     rec.flush(ctx)
     alloc.flush_all_caches()
@@ -43,7 +47,7 @@ def host_layer_demo():
     alloc.close()
 
 
-def serving_demo():
+def serving_demo(n_requests: int = 5, max_new: int = 8):
     print("== device layer: paged serving with optimistic reclamation ==")
     cfg = reduced(get_config("olmo-1b"))
     model = build_model(cfg)
@@ -51,20 +55,36 @@ def serving_demo():
     eng = PagedServingEngine(cfg, params, num_pages=8, page_size=4,
                              max_batch=3, max_pages_per_seq=8)
     rng = np.random.default_rng(0)
-    reqs = [eng.submit(rng.integers(0, cfg.vocab, (6,)).tolist(), 8)
-            for _ in range(5)]
+    reqs = [eng.submit(rng.integers(0, cfg.vocab, (6,)).tolist(), max_new)
+            for _ in range(n_requests)]
     stats = eng.run()
     assert all(r.state == "finished" for r in reqs)
     print(f"   {stats.tokens_committed} tokens, preemptions={stats.preemptions}, "
           f"restarts={stats.reader_restarts}, warnings={stats.warnings_fired}")
 
+    # prefix sharing: the same system prompt across requests is served from
+    # the refcounted prefix cache — prefill skipped, pages aliased
+    eng2 = PagedServingEngine(cfg, params, num_pages=32, page_size=4,
+                              max_batch=3, max_pages_per_seq=8,
+                              prefix_cache=True)
+    system = rng.integers(0, cfg.vocab, (8,)).tolist()
+    reqs2 = [eng2.submit(system + rng.integers(0, cfg.vocab, (2,)).tolist(),
+                         max_new)
+             for _ in range(n_requests)]
+    stats2 = eng2.run()
+    assert all(r.state == "finished" for r in reqs2)
+    print(f"   prefix cache: hits={stats2.prefix_hits} "
+          f"tokens_reused={stats2.prefix_tokens_reused} "
+          f"pages_allocated={stats2.pages_allocated} "
+          f"(vs {stats.pages_allocated} unshared)")
 
-def train_demo():
-    print("== training substrate (reduced olmo-1b, 40 steps) ==")
+
+def train_demo(steps: int = 40):
+    print(f"== training substrate (reduced olmo-1b, {steps} steps) ==")
     import repro.launch.train as T
     import argparse
     args = argparse.Namespace(
-        arch="olmo-1b", reduced=True, steps=40, batch=2, seq=64, lr=3e-3,
+        arch="olmo-1b", reduced=True, steps=steps, batch=2, seq=64, lr=3e-3,
         seed=0, log_every=10, ckpt_dir=None, ckpt_every=50, fail_at_step=None,
         grad_compression="none")
     T.train(args)

@@ -1,15 +1,21 @@
 """Serving example: batched requests through the paged engine under memory
-pressure — preemptions and version-validated restarts happen live.
+pressure — preemptions and version-validated restarts happen live — then the
+same workload with the refcounted prefix cache: every request carries the
+same 8-token system prompt, so later admissions share its KV pages
+(refcount += 1) and skip its prefill entirely.
 
 Run: PYTHONPATH=src python examples/serve_paged.py
 """
 
-import sys
-
 from repro.launch.serve import main
 
+BASE = ["--requests", "12", "--num-pages", "12", "--page-size", "8",
+        "--max-batch", "4", "--prompt-len", "10", "--max-new", "20"]
+
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--requests", "12", "--num-pages", "12",
-                "--page-size", "8", "--max-batch", "4", "--prompt-len", "10",
-                "--max-new", "20"]
-    main()
+    print("== no sharing: every prompt distinct, pool under pressure ==")
+    main(BASE)
+    print("== prefix sharing: common system prompt served from the cache ==")
+    stats = main(BASE + ["--prefix-cache", "--shared-prefix", "8",
+                         "--num-pages", "24"])
+    assert stats.prefix_hits > 0, "shared prompts must hit the prefix index"

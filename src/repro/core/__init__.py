@@ -1,7 +1,8 @@
-# The paper's primary contribution: LRMalloc extended with palloc +
-# virtual-memory release (host layer), and its TPU-native adaptation —
-# a versioned paged KV-cache pool with optimistic-access semantics
-# (device layer, see pagepool.py / epoch.py).
+"""The paper's primary contribution: LRMalloc extended with palloc +
+virtual-memory release (host layer), and its TPU-native adaptation —
+a refcounted, versioned paged KV-cache pool with optimistic-access
+semantics (device layer, see pagepool.py)."""
+
 from .atomic import AtomicRef, AtomicCounter, ReclaimStats, memory_barrier
 from .sizeclass import SIZE_CLASSES, MAX_SZ, size_to_class, class_block_size
 from .vm import Arena, ReleaseStrategy, LargeAllocation, PAGE_SIZE

@@ -25,10 +25,11 @@ class AtomicRef:
         self._lock = threading.Lock()
 
     def load(self):
-        # On x86-64/TSO an aligned load is atomic; under the GIL likewise.
+        """Atomic load (an aligned load on x86-64/TSO; GIL-atomic here)."""
         return self._value
 
     def store(self, value) -> None:
+        """Atomic store."""
         with self._lock:
             self._value = value
 
@@ -41,12 +42,14 @@ class AtomicRef:
             return False
 
     def swap(self, new):
+        """Atomic exchange: store ``new``, return the previous value."""
         with self._lock:
             old = self._value
             self._value = new
             return old
 
     def fetch_add(self, delta=1):
+        """Atomic fetch-and-add: returns the value BEFORE the addition."""
         with self._lock:
             old = self._value
             self._value = old + delta
@@ -57,10 +60,12 @@ class AtomicCounter(AtomicRef):
     """Monotonic counter used for statistics (not part of the algorithms)."""
 
     def increment(self, delta: int = 1) -> None:
+        """Add ``delta`` (statistics only; not an algorithmic CAS site)."""
         self.fetch_add(delta)
 
     @property
     def value(self) -> int:
+        """Current count (racy read is fine for statistics)."""
         return self._value
 
 
@@ -87,6 +92,7 @@ class ReclaimStats:
     hazard_writes: AtomicCounter = field(default_factory=AtomicCounter)
 
     def snapshot(self) -> dict:
+        """Plain-int copy of every counter (for printing/asserting)."""
         return {
             k: getattr(self, k).value
             for k in (

@@ -96,6 +96,7 @@ class HarrisMichaelList:
     # -- set operations -----------------------------------------------------------
 
     def insert(self, key: int, ctx: ThreadCtx) -> bool:
+        """Insert ``key``; False if already present (Michael's algorithm)."""
         rec, alloc = self.rec, self.alloc
         node = rec.alloc_node(ctx, NODE_SIZE)
         alloc.write_u64(node, key)
@@ -115,6 +116,8 @@ class HarrisMichaelList:
                 return True
 
     def delete(self, key: int, ctx: ThreadCtx) -> bool:
+        """Logically mark then unlink ``key``; the node is RETIRED, not freed
+        — the reclaimer decides when memory is safe to reuse."""
         rec, alloc = self.rec, self.alloc
         while True:
             prev, cur, found, nxt = self._find(key, ctx)
@@ -188,13 +191,17 @@ class MichaelHashTable:
         return self.buckets[(key * self._GOLD) % self.nbuckets]
 
     def insert(self, key: int, ctx: ThreadCtx) -> bool:
+        """Insert into the key's bucket list; False if present."""
         return self._bucket(key).insert(key, ctx)
 
     def delete(self, key: int, ctx: ThreadCtx) -> bool:
+        """Delete from the key's bucket list; False if absent."""
         return self._bucket(key).delete(key, ctx)
 
     def contains(self, key: int, ctx: ThreadCtx) -> bool:
+        """Membership test via an optimistic traversal of the bucket."""
         return self._bucket(key).contains(key, ctx)
 
     def size(self, ctx: ThreadCtx) -> int:
+        """Total keys across buckets (O(n); test/debug helper)."""
         return sum(len(b.keys(ctx)) for b in self.buckets)

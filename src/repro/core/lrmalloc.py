@@ -47,6 +47,7 @@ class Anchor:
     tag: int  # ABA tag
 
     def as_tuple(self):
+        """Packed form for the descriptor's single-word anchor CAS."""
         return (self.state, self.avail, self.count, self.tag)
 
 
@@ -102,6 +103,7 @@ class AllocatorStats:
     large_allocs: int = 0
 
     def snapshot(self) -> dict:
+        """Plain-dict copy of the allocator counters."""
         return dict(self.__dict__)
 
 
@@ -145,6 +147,9 @@ class LRMalloc:
     # -- public API ------------------------------------------------------------
 
     def malloc(self, nbytes: int) -> int:
+        """Ordinary allocation (LRMalloc fast path; large sizes direct-map).
+        The block may be UNMAPPED after free — use ``palloc`` for memory
+        optimistic readers may touch after reclamation."""
         if nbytes > MAX_SZ:
             return self._malloc_large(nbytes)
         return self._malloc_sc(size_to_class(nbytes), persistent=False)
@@ -160,6 +165,9 @@ class LRMalloc:
         return self._malloc_sc(size_to_class(nbytes), persistent=True)
 
     def free(self, off: int) -> None:
+        """Free a block into the thread cache (flushes at CACHE_CAP).  For
+        persistent blocks the RANGE stays readable afterwards — only reuse
+        is gated, which is what lets OA readers race reclamation."""
         if off >= self.arena.total:
             return self._free_large(off)
         desc = self.pagemap[off - off % self.sb_size]
@@ -173,12 +181,15 @@ class LRMalloc:
 
     # convenience accessors used by data structures / tests
     def read_u64(self, off: int) -> int:
+        """Read 8 bytes at offset (valid even for freed persistent blocks)."""
         return self.arena.read_u64(off)
 
     def write_u64(self, off: int, val: int) -> None:
+        """Write 8 bytes at offset (caller must hold a hazard/ownership)."""
         self.arena.write_u64(off, val)
 
     def cas_u64(self, off: int, exp: int, new: int) -> bool:
+        """CAS 8 bytes at offset (emulated word CAS; see core.atomic)."""
         return self.arena.cas_u64(off, exp, new)
 
     def flush_all_caches(self) -> None:
@@ -336,9 +347,11 @@ class LRMalloc:
     # -- introspection -----------------------------------------------------------
 
     def resident_bytes(self) -> int:
+        """Physically resident bytes of the arena (smaps Pss; see vm.py)."""
         return self.arena.resident_bytes()
 
     def close(self) -> None:
+        """Release the arena mapping and any direct-mapped large blocks."""
         self.arena.close()
         for la in self._large.values():
             la.close()

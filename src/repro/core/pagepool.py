@@ -40,6 +40,29 @@ optimistic reader of the released range, the OA warning channel again) and
 (``core/lrmalloc.py`` + ``core/vm.py``) and this device pool report release
 behaviour through the same ``ReleaseStrategy`` vocabulary.
 
+Reference-counted sharing (the hybrid-system claim, applied)
+------------------------------------------------------------
+The paper's thesis is that reclamation and allocation should be ONE
+system, so memory freed by one component is safely reusable by another.
+The refcount layer makes that real for KV pages: every page carries a
+reference count (``page_refcount``) so several block tables — several
+requests sharing a common prompt prefix — can reference the same physical
+page at once.
+
+- ``alloc`` grants a page with refcount 1 (sole owner).
+- ``share_pages`` adds an owner (refcount += 1).  Sharing never bumps a
+  version: the page's content stays valid for every holder.
+- ``unshare_pages`` (== ``free_pages``) drops an owner.  Only the
+  **zero-transition** returns the page to its superblock's LIFO free list
+  — and THAT is the moment its version bumps and the clock ticks, so an
+  in-flight optimistic reader of a fully-unshared page fails
+  ``validate_and_commit`` exactly like a reader of a reclaimed node (the
+  VBR-style version bump of Sheffi et al., applied per page).
+- A page with refcount > 0 is never on a free list, so it can never be
+  granted to a new owner and its superblock can never be EMPTY — hence
+  ``release_empty_superblocks`` can never unmap a shared page (the guard
+  is also enforced explicitly, belt and braces).
+
 All state lives in a JAX pytree; all operations are pure and jit-able, so
 the pool shards with the serving mesh (pages over 'data', heads over
 'model') and the alloc/free path adds no host-device sync.
@@ -60,6 +83,7 @@ __all__ = [
     "PagePool", "ReleaseStrategy", "pool_init",
     "SB_FULL", "SB_PARTIAL", "SB_EMPTY", "SB_UNMAPPED", "superblock_states",
     "alloc_pages", "alloc_pages_batch", "free_pages",
+    "share_pages", "unshare_pages",
     "release_empty_superblocks", "map_superblocks",
     "snapshot_versions", "validate_and_commit", "validate_read",
     "kv_pages_init", "append_kv", "gather_kv",
@@ -73,22 +97,34 @@ SB_FULL, SB_PARTIAL, SB_EMPTY, SB_UNMAPPED = 0, 1, 2, 3
 
 
 class PagePool(NamedTuple):
+    """Device-side page pool state (a pure JAX pytree; see module docstring).
+
+    OA contract: ``page_version`` only moves when a page is *reclaimed*
+    (refcount zero-transition, or superblock release) — never on alloc or
+    share — so a snapshot taken at grant time stays valid for exactly as
+    long as the page has at least one owner.
+    """
+
     sb_pages: jax.Array  # [S, K] int32 per-superblock LIFO free lists
     sb_free: jax.Array  # [S] int32 anchor: free pages per superblock
     sb_mapped: jax.Array  # [S] bool anchor: in circulation?
     page_version: jax.Array  # [num_pages] uint32 — bumped on free + release
+    page_refcount: jax.Array  # [num_pages] int32 — owners (0 = free)
     clock: jax.Array  # [] uint32 — global reclamation clock (OA-VER)
 
     @property
     def num_pages(self) -> int:
+        """Total pages in the arena (constant: palloc'd once)."""
         return self.page_version.shape[0]
 
     @property
     def num_superblocks(self) -> int:
+        """Superblock count S (the last one may be ragged)."""
         return self.sb_pages.shape[0]
 
     @property
     def pages_per_superblock(self) -> int:
+        """Superblock granularity K (pages per LIFO free list)."""
         return self.sb_pages.shape[1]
 
     @property
@@ -119,6 +155,7 @@ def superblock_states(pool: PagePool) -> jax.Array:
 
 def pool_init(num_pages: int,
               pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK) -> PagePool:
+    """Build a fully-mapped pool: every page free (refcount 0), version 0."""
     K = max(1, min(pages_per_superblock, num_pages))
     S = -(-num_pages // K)
     lists = np.full((S, K), -1, np.int32)
@@ -133,6 +170,7 @@ def pool_init(num_pages: int,
         sb_free=jnp.asarray(caps, jnp.int32),
         sb_mapped=jnp.ones((S,), bool),
         page_version=jnp.zeros((num_pages,), jnp.uint32),
+        page_refcount=jnp.zeros((num_pages,), jnp.int32),
         clock=jnp.zeros((), jnp.uint32),
     )
 
@@ -180,7 +218,11 @@ def _segmented_pop_impl(pool: PagePool, total: jax.Array, max_total: int):
     pages = pool.sb_pages[sb, jnp.clip(pos, 0, K - 1)]
     pages = jnp.where(j < total, pages, -1).astype(jnp.int32)
     taken = jnp.clip(total - (cum - avail), 0, avail)
-    return pool._replace(sb_free=pool.sb_free.at[order].add(-taken)), pages
+    # a granted page leaves the free list with exactly one owner
+    pidx = jnp.where(pages >= 0, pages, pool.num_pages)
+    refcount = pool.page_refcount.at[pidx].set(1, mode="drop")
+    return pool._replace(sb_free=pool.sb_free.at[order].add(-taken),
+                         page_refcount=refcount), pages
 
 
 def _alloc_pages_batch_impl(pool: PagePool, need: jax.Array, max_grow: int):
@@ -241,45 +283,118 @@ def alloc_pages(pool: PagePool, n: int):
 
 
 # ---------------------------------------------------------------------------
-# free: push each page back onto its HOME superblock's free list
+# refcounted free/share: a page re-enters its HOME superblock's LIFO free
+# list only on the refcount ZERO-TRANSITION
 
 
-def _free_pages_impl(pool: PagePool, pages: jax.Array) -> PagePool:
-    """Traceable body of :func:`free_pages` (reused inside fused jits)."""
+def _unshare_pages_impl(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Traceable body of :func:`unshare_pages` (reused inside fused jits).
+
+    Each valid entry drops one reference from its page.  The entry whose
+    drop takes the count to zero pushes the page back onto its superblock's
+    free list, bumps the page's version and arms the clock tick.  Duplicate
+    entries within one batch each count as a drop; drops below zero clamp
+    (a double-free of an already-free page is a no-op, not corruption).
+    """
     pages = pages.reshape(-1).astype(jnp.int32)
     n = pages.shape[0]
+    P = pool.num_pages
     S, K = pool.sb_pages.shape
     valid = pages >= 0
-    sb = jnp.where(valid, pages // K, S)  # S = OOB row -> dropped scatter
-    # position of each page within its superblock's push group: number of
-    # earlier valid pages in this batch bound for the same superblock
+    pidx = jnp.where(valid, pages, P)
+    rc0 = jnp.where(valid, pool.page_refcount[jnp.minimum(pidx, P - 1)], 0)
+    # cnt_incl[i] = occurrences of pages[i] among valid entries 0..i — the
+    # entry where the cumulative drop count reaches the old refcount is the
+    # (unique) one that performs the zero-transition push
     i = jnp.arange(n)
-    before = (sb[None, :] == sb[:, None]) & (i[None, :] < i[:, None]) & valid[None, :]
+    same = (pages[None, :] == pages[:, None]) & valid[None, :] & valid[:, None]
+    cnt_incl = jnp.sum(same & (i[None, :] <= i[:, None]), axis=1).astype(jnp.int32)
+    frees = valid & (rc0 > 0) & (cnt_incl == rc0)
+    # total drops per page (clamped at the old count: no negative refcounts)
+    drops = jnp.zeros((P + 1,), jnp.int32).at[pidx].add(
+        valid.astype(jnp.int32))[:P]
+    refcount = jnp.maximum(pool.page_refcount - drops, 0)
+    # push only the zero-transition entries, packed per superblock
+    sb = jnp.where(frees, pages // K, S)  # S = OOB row -> dropped scatter
+    before = (sb[None, :] == sb[:, None]) & (i[None, :] < i[:, None]) & frees[None, :]
     occ = jnp.sum(before, axis=1).astype(jnp.int32)
     slot = pool.sb_free[jnp.minimum(sb, S - 1)] + occ
     sb_lists = pool.sb_pages.at[sb, slot].set(pages, mode="drop")
     freed = jnp.zeros((S,), jnp.int32).at[sb].add(
-        valid.astype(jnp.int32), mode="drop")
-    pidx = jnp.where(valid, pages, pool.num_pages)
-    version = pool.page_version.at[pidx].add(1, mode="drop")
-    # the warning fires only when something was actually reclaimed: an
-    # all-(-1) batch must not tick the clock (nor the engine's host mirror)
-    any_valid = jnp.any(valid)
+        frees.astype(jnp.int32), mode="drop")
+    fidx = jnp.where(frees, pages, P)
+    version = pool.page_version.at[fidx].add(1, mode="drop")
+    # the warning fires only when something was actually reclaimed: a batch
+    # of pure decrements (or all-(-1)) must not tick the clock (nor the
+    # engine's host mirror)
+    any_freed = jnp.any(frees)
     return pool._replace(
         sb_pages=sb_lists,
         sb_free=pool.sb_free + freed,
         page_version=version,
-        clock=pool.clock + any_valid.astype(jnp.uint32),
+        page_refcount=refcount,
+        clock=pool.clock + any_freed.astype(jnp.uint32),
     )
 
 
 @functools.partial(jax.jit, donate_argnums=0)
+def unshare_pages(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Drop one reference from each page (−1 entries ignored).
+
+    Pages whose count hits ZERO re-enter their superblock's free list and
+    fire the warning: the page's version bumps and the global clock ticks
+    once per batch containing at least one zero-transition (one warning per
+    reclamation batch — Alg. 1/2's single barrier).  Pages still referenced
+    elsewhere just lose a reference: no version bump, so surviving holders'
+    snapshots stay valid.  A batch with no zero-transition does NOT tick
+    the clock."""
+    return _unshare_pages_impl(pool, pages)
+
+
+# free == unshare: with every grant starting at refcount 1, freeing a
+# solely-owned page is exactly the zero-transition decref.  The alias keeps
+# the paper-facing vocabulary ("retire/free") alongside the sharing one.
+_free_pages_impl = _unshare_pages_impl
+
+
+@functools.partial(jax.jit, donate_argnums=0)
 def free_pages(pool: PagePool, pages: jax.Array) -> PagePool:
-    """Push pages (−1 entries ignored) and fire the warning: each page's
-    version bumps and the global clock ticks once per batch (one warning per
-    reclamation batch — Alg. 1/2's single barrier).  A batch with no real
-    pages is a no-op: the clock does NOT tick."""
-    return _free_pages_impl(pool, pages)
+    """Release the caller's reference on each page (−1 entries ignored).
+
+    Alias of :func:`unshare_pages`: a page granted by ``alloc`` holds one
+    reference, so for unshared pages this is the classic optimistic free —
+    version bump + clock tick, the page immediately re-allocatable.  For
+    pages with extra holders (``share_pages``) only the caller's reference
+    is dropped."""
+    return _unshare_pages_impl(pool, pages)
+
+
+def _share_pages_impl(pool: PagePool, pages: jax.Array):
+    """Traceable body of :func:`share_pages` (reused inside fused jits)."""
+    pages = pages.reshape(-1).astype(jnp.int32)
+    P = pool.num_pages
+    valid = pages >= 0
+    pidx = jnp.where(valid, pages, P)
+    rc = jnp.where(valid, pool.page_refcount[jnp.minimum(pidx, P - 1)], 1)
+    # sharing a FREE page is a caller bug (it could be granted to someone
+    # else concurrently): the increment is suppressed and ok goes False
+    ok = jnp.all(rc > 0)
+    inc = jnp.zeros((P + 1,), jnp.int32).at[pidx].add(
+        (valid & (rc > 0)).astype(jnp.int32))[:P]
+    return pool._replace(page_refcount=pool.page_refcount + inc), ok
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def share_pages(pool: PagePool, pages: jax.Array):
+    """Add one reference to each LIVE page (−1 entries ignored).
+
+    Returns (pool, ok) — ok is False if any entry named a free page (its
+    increment is suppressed: a free page may be granted to a new owner at
+    any moment, so sharing it would be a use-after-free in the making).
+    Sharing bumps NO version and ticks NO clock: the page content stays
+    valid for every holder, and in-flight optimistic readers are unharmed.
+    Duplicate entries add one reference each."""
+    return _share_pages_impl(pool, pages)
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +405,14 @@ def _release_empty_impl(pool: PagePool, max_release: jax.Array,
                         keep_mapped: jax.Array):
     S, K = pool.sb_pages.shape
     cap = _capacities(pool)
-    empty = pool.sb_mapped & (pool.sb_free >= cap)
+    # a page with refcount > 0 is never on a free list, so its superblock
+    # can never be EMPTY — but the invariant "releasing a superblock with
+    # any refcount > 0 page is impossible" is enforced explicitly too, so
+    # even a corrupted anchor cannot unmap a referenced (shared) page
+    page_sb_all = jnp.arange(pool.num_pages, dtype=jnp.int32) // K
+    refs_in_sb = jnp.zeros((S,), jnp.int32).at[page_sb_all].add(
+        (pool.page_refcount > 0).astype(jnp.int32))
+    empty = pool.sb_mapped & (pool.sb_free >= cap) & (refs_in_sb == 0)
     mapped_count = jnp.sum(pool.sb_mapped.astype(jnp.int32))
     quota = jnp.clip(
         jnp.minimum(max_release, mapped_count - keep_mapped), 0, S)
@@ -298,8 +420,7 @@ def _release_empty_impl(pool: PagePool, max_release: jax.Array,
     # low-indexed superblocks among equals) keeps the low region hot
     from_top = jnp.cumsum(empty[::-1].astype(jnp.int32))[::-1]
     release = empty & (from_top <= quota)
-    page_sb = jnp.arange(pool.num_pages, dtype=jnp.int32) // K
-    version = pool.page_version + release[page_sb].astype(jnp.uint32)
+    version = pool.page_version + release[page_sb_all].astype(jnp.uint32)
     n_rel = jnp.sum(release.astype(jnp.int32))
     pages_rel = jnp.sum(jnp.where(release, cap, 0)).astype(jnp.int32)
     return (

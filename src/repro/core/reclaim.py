@@ -65,6 +65,7 @@ class ReclaimerBase:
     # -- registry ---------------------------------------------------------------
 
     def thread_ctx(self) -> ThreadCtx:
+        """This thread's registered context (created on first use)."""
         ctx = getattr(self._tls, "ctx", None)
         if ctx is None:
             with self._reg_lock:
@@ -76,12 +77,15 @@ class ReclaimerBase:
     # -- reader/writer protocol ---------------------------------------------------
 
     def start_op(self, ctx: ThreadCtx) -> None:
+        """Begin an optimistic operation (OA-VER snapshots the clock here)."""
         pass
 
-    def check(self, ctx: ThreadCtx) -> bool:  # True = reads so far are valid
+    def check(self, ctx: ThreadCtx) -> bool:
+        """True iff every read since start_op is still valid (no warning)."""
         return True
 
     def protect(self, ctx: ThreadCtx, slot: int, off: int) -> None:
+        """Publish a hazard pointer for ``off`` in the ctx's ``slot``."""
         ctx.hazards[slot].store(off)
         self.stats.hazard_writes.increment()
 
@@ -92,12 +96,14 @@ class ReclaimerBase:
         return self.check(ctx)
 
     def clear_hazards(self, ctx: ThreadCtx) -> None:
+        """Drop every hazard this ctx holds (end of the protected region)."""
         for h in ctx.hazards:
             h.store(0)
 
     # -- allocation / retirement ----------------------------------------------------
 
     def alloc_node(self, ctx: ThreadCtx, nbytes: int) -> int:
+        """Allocate node memory under this scheme's rules (palloc for OA)."""
         raise NotImplementedError
 
     def cancel_node(self, ctx: ThreadCtx, off: int) -> None:
@@ -105,6 +111,7 @@ class ReclaimerBase:
         self.alloc.free(off)
 
     def retire(self, ctx: ThreadCtx, off: int) -> None:
+        """Hand an unlinked node to the reclaimer (free happens later)."""
         raise NotImplementedError
 
     def flush(self, ctx: ThreadCtx) -> None:
@@ -134,15 +141,19 @@ class NR(ReclaimerBase):
     name = "NR"
 
     def alloc_node(self, ctx: ThreadCtx, nbytes: int) -> int:
+        """Plain malloc — nothing is ever reclaimed."""
         return self.alloc.malloc(nbytes)
 
     def retire(self, ctx: ThreadCtx, off: int) -> None:
+        """Count the retire and leak the node (the baseline's point)."""
         self.stats.nodes_retired.increment()  # dropped on the floor
 
     def protect(self, ctx: ThreadCtx, slot: int, off: int) -> None:
+        """No-op: memory never moves under NR."""
         pass  # nothing ever moves; no protection needed
 
     def validate(self, ctx: ThreadCtx) -> bool:
+        """Always valid: nothing is ever reclaimed."""
         return True
 
 
@@ -153,9 +164,11 @@ class OABit(ReclaimerBase):
     uses_palloc = True
 
     def alloc_node(self, ctx: ThreadCtx, nbytes: int) -> int:
+        """palloc: the node's range stays readable after reclamation."""
         return self.alloc.palloc(nbytes)
 
     def check(self, ctx: ThreadCtx) -> bool:
+        """Consume this thread's warning bit; False = restart the op."""
         if ctx.warning.load():
             ctx.warning.store(False)
             self.stats.reader_restarts.increment()
@@ -163,6 +176,7 @@ class OABit(ReclaimerBase):
         return True
 
     def retire(self, ctx: ThreadCtx, off: int) -> None:
+        """Limbo the node; a full limbo list triggers warn-then-free."""
         self.stats.nodes_retired.increment()
         ctx.limbo.append(off)
         if len(ctx.limbo) >= self.limbo_threshold:
@@ -177,6 +191,7 @@ class OABit(ReclaimerBase):
         self._scan_and_free(ctx)
 
     def flush(self, ctx: ThreadCtx) -> None:
+        """Reclaim everything limboed by this ctx (teardown/accounting)."""
         if ctx.limbo:
             self._reclaim(ctx)
 
@@ -193,12 +208,15 @@ class OAVer(ReclaimerBase):
         self.global_clock = AtomicRef(0)
 
     def alloc_node(self, ctx: ThreadCtx, nbytes: int) -> int:
+        """palloc: the node's range stays readable after reclamation."""
         return self.alloc.palloc(nbytes)
 
     def start_op(self, ctx: ThreadCtx) -> None:
+        """Snapshot the global clock as this op's LocalClock (Alg. 2)."""
         ctx.local_clock = self.global_clock.load()
 
     def check(self, ctx: ThreadCtx) -> bool:
+        """Clock moved since start_op? -> reads may be stale, restart."""
         g = self.global_clock.load()
         if g != ctx.local_clock:
             ctx.local_clock = g
@@ -207,6 +225,7 @@ class OAVer(ReclaimerBase):
         return True
 
     def retire(self, ctx: ThreadCtx, off: int) -> None:
+        """Alg. 2 retire: bump-or-piggyback the clock, then scan-and-free."""
         # Alg. 2, verbatim structure.
         self.stats.nodes_retired.increment()
         if len(ctx.limbo) >= self.limbo_threshold:
@@ -225,6 +244,7 @@ class OAVer(ReclaimerBase):
         ctx.limbo.append(off)
 
     def flush(self, ctx: ThreadCtx) -> None:
+        """Drain this ctx's limbo (hazard-protected nodes may remain)."""
         while ctx.limbo:
             before = len(ctx.limbo)
             self.global_clock.cas(ctx.local_clock, ctx.local_clock + 1)
@@ -260,12 +280,14 @@ class OA(ReclaimerBase):
         self.pool_size = pool_size
 
     def grow_pool(self, n: int) -> None:
+        """Pre-size the closed pool (the knob the paper's OA requires)."""
         with self._pool_lock:
             for _ in range(n):
                 self._ready.append(self.alloc.malloc(self.node_size))
             self.pool_size += n
 
     def alloc_node(self, ctx: ThreadCtx, nbytes: int) -> int:
+        """Pop from the ready pool; exhaustion forces a recycling phase."""
         assert nbytes <= self.node_size
         while True:
             with self._pool_lock:
@@ -280,10 +302,12 @@ class OA(ReclaimerBase):
                 )
 
     def cancel_node(self, ctx: ThreadCtx, off: int) -> None:
+        """Return a never-published node straight to the ready pool."""
         with self._pool_lock:
             self._ready.append(off)
 
     def check(self, ctx: ThreadCtx) -> bool:
+        """Consume this thread's warning bit; False = restart the op."""
         if ctx.warning.load():
             ctx.warning.store(False)
             self.stats.reader_restarts.increment()
@@ -291,6 +315,7 @@ class OA(ReclaimerBase):
         return True
 
     def retire(self, ctx: ThreadCtx, off: int) -> None:
+        """Park the node in the retired list for the next recycling phase."""
         self.stats.nodes_retired.increment()
         with self._pool_lock:
             self._retired.append(off)

@@ -54,4 +54,5 @@ def size_to_class(nbytes: int) -> int:
 
 
 def class_block_size(ci: int) -> int:
+    """Block size in bytes of size class ``ci``."""
     return SIZE_CLASSES[ci]

@@ -59,9 +59,36 @@ PAGE_SIZE = os.sysconf("SC_PAGESIZE")
 
 
 class ReleaseStrategy(enum.Enum):
+    """How released superblocks relate to the OS (paper §3.1–§3.2).
+
+    Shared vocabulary between the host arena (this module) and the device
+    page pool (``core.pagepool`` / the serving engine): ``KEEP`` recycles
+    within the process but never releases; ``MADVISE`` / ``SHARED_REMAP``
+    release physical frames while the virtual range stays readable.
+    """
+
     KEEP = "keep"
     MADVISE = "madvise"
     SHARED_REMAP = "shared_remap"
+
+
+def superblock_floor(distinct_live_pages: int, pages_per_superblock: int,
+                     min_mapped: int = 1) -> int:
+    """Mapped-superblock floor a release must respect, given demand.
+
+    ``distinct_live_pages`` must count every page ONCE no matter how many
+    holders reference it: with the refcount layer a prompt-prefix page can
+    back several requests plus the prefix cache simultaneously, and summing
+    per-request footprints would overstate demand — pinning superblocks
+    mapped that are actually releasable.  The caller (the engine's
+    quiescence shrink) computes the distinct count from its host mirrors;
+    this helper just turns pages into a superblock floor:
+    ``max(min_mapped, ceil(pages / pages_per_superblock))``.
+    """
+    if pages_per_superblock <= 0:
+        raise ValueError("pages_per_superblock must be positive")
+    need = -(-max(0, distinct_live_pages) // pages_per_superblock)
+    return max(min_mapped, need)
 
 
 class Arena:
@@ -180,9 +207,11 @@ class Arena:
     # -- memory access --------------------------------------------------------
 
     def read_u64(self, off: int) -> int:
+        """Read 8 little-endian bytes (valid even after any release)."""
         return int.from_bytes(self.view[off : off + 8], "little")
 
     def write_u64(self, off: int, val: int) -> None:
+        """Write 8 little-endian bytes at ``off``."""
         self.view[off : off + 8] = (val & (2**64 - 1)).to_bytes(8, "little")
 
     def cas_u64(self, off: int, expected: int, new: int) -> bool:
@@ -247,12 +276,16 @@ class Arena:
         return (self._smaps_field("Pss", off, length) * 1024) // PAGE_SIZE
 
     def resident_rss_pages(self, off: int = 0, length: int | None = None) -> int:
+        """Rss-based residency — the 'haywire' number under SHARED_REMAP
+        (each mapping of the one shared frame counts fully; paper §3.2)."""
         return (self._smaps_field("Rss", off, length) * 1024) // PAGE_SIZE
 
     def resident_bytes(self, off: int = 0, length: int | None = None) -> int:
+        """Physically resident bytes in the range (Pss-based)."""
         return self.resident_pages(off, length) * PAGE_SIZE
 
     def close(self) -> None:
+        """Unmap the arena and close the shared-frame memfd."""
         self.view.release()
         self._mm.close()
         if self._shared_fd >= 0:
@@ -272,5 +305,6 @@ class LargeAllocation:
         self.view = memoryview(self._mm)
 
     def close(self) -> None:
+        """Unmap the direct-mapped allocation."""
         self.view.release()
         self._mm.close()

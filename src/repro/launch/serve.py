@@ -2,7 +2,11 @@
 
 Synthesizes a batch of requests against a (reduced, by default) model and
 reports throughput plus the OA counters — preemptions, reader restarts,
-warnings (pool clock) — under a configurable memory budget.
+warnings (pool clock) — under a configurable memory budget.  With
+``--prefix-cache`` the requests share a common system prompt
+(``--shared-prefix`` tokens long) and the engine's refcounted prefix index
+serves it: later admissions skip prefill for the shared pages and the
+sharing counters (hits / tokens reused / COW copies) are reported.
 """
 
 from __future__ import annotations
@@ -17,7 +21,8 @@ from repro.models import build_model
 from repro.serving import PagedServingEngine
 
 
-def main():
+def main(argv: list[str] | None = None):
+    """Run the serving demo; ``argv`` overrides ``sys.argv`` (tests use it)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -28,7 +33,11 @@ def main():
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable refcounted prompt-prefix sharing")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt common to every request")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -41,10 +50,13 @@ def main():
         cfg, params, num_pages=args.num_pages, page_size=args.page_size,
         max_batch=args.max_batch,
         max_pages_per_seq=(args.prompt_len + args.max_new) // args.page_size + 2,
+        prefix_cache=args.prefix_cache,
     )
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab, (args.shared_prefix,)).tolist()
+    tail_len = max(1, args.prompt_len - args.shared_prefix)
     reqs = [
-        eng.submit(rng.integers(0, cfg.vocab, (args.prompt_len,)).tolist(),
+        eng.submit(shared + rng.integers(0, cfg.vocab, (tail_len,)).tolist(),
                    args.max_new)
         for _ in range(args.requests)
     ]
@@ -56,7 +68,15 @@ def main():
     print(f"[serve] OA counters: warnings={stats.warnings_fired} "
           f"preemptions={stats.preemptions} reader_restarts={stats.reader_restarts} "
           f"pages_reclaimed={stats.pages_reclaimed}")
+    if args.prefix_cache:
+        print(f"[serve] prefix sharing: hits={stats.prefix_hits} "
+              f"tokens_reused={stats.prefix_tokens_reused} "
+              f"cow_copies={stats.cow_copies} "
+              f"pages_allocated={stats.pages_allocated} "
+              f"cache_pages={stats.prefix_cache_pages} "
+              f"evictions={stats.prefix_evictions}")
     assert done == len(reqs)
+    return stats
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
+"""Continuous-batching LM serving on the refcounted, versioned page pool:
+the engine (scheduling, prefix sharing, physical release) and the fused
+sync-free decode step."""
+
 from .engine import PagedServingEngine, Request, EngineStats
 from .paged_decode import paged_decode_step, fused_decode_step, kv_storage_init
 

@@ -20,12 +20,25 @@ The OA story end-to-end (DESIGN.md §2):
   of circulation (``shrink()`` / the quiescence policy below) and bring them
   back under admission pressure instead of preempting — the elastic arena
   that lets the device hand KV memory between workloads.
+- **refcounted prefix sharing** (the hybrid-system claim, applied): with
+  ``prefix_cache=True`` the engine keeps a host-side index from token-block
+  prefixes to resident KV pages.  Admission matches a new request's prompt
+  against it and grants the matching pages SHARED (refcount += 1, no copy,
+  no prefill for the covered tokens); a request finishing donates its
+  committed pages into the index instead of freeing them.  Shared pages are
+  copy-on-write: a divergent write (the only possible one is into a
+  partially-matched tail page) triggers a batched page copy + reference
+  drop inside ``fused_decode_step``'s alloc path.  Preemption and finish
+  decref instead of free — a page returns to the free list (version bump,
+  clock tick: the OA warning) only on the refcount ZERO-transition, so
+  sharing composes with optimistic access for free: holders' snapshots stay
+  valid exactly as long as they hold a reference.
 
 Hot-path contract (the point of this engine): block tables, lengths, the
 prompt buffer, the OA snapshot and the free pool are persistent DEVICE
 arrays updated functionally by ``fused_decode_step``; a steady-state decode
 step performs exactly ONE host transfer ([B] tokens + [B] valid + [B]
-grant-ok in a single ``device_get``) and zero host→device uploads.  The
+grant-info in a single ``device_get``) and zero host→device uploads.  The
 Python scheduler touches host state only on admission, preemption,
 completion and explicit pool maintenance (shrink/remap) — the same
 amortization the paper applies to reclamation (validate once per batch, not
@@ -44,9 +57,16 @@ Release / remap knobs (all host-side; the hot path never syncs for them):
   no admission pressure, EMPTY superblocks above the floor are released
   (``None`` = only explicit ``shrink()`` calls release).
 - ``min_mapped_superblocks``: floor of mapped superblocks a release keeps.
+- ``prefix_cache`` / ``prefix_cache_pages``: enable prefix sharing and cap
+  how many pages the donation index may pin (default: half the pool).
+  Under pressure the cache is evicted BEFORE any running request is
+  preempted; eviction is the same optimistic reclamation as everything
+  else (``unshare_pages``: version bump on the zero-transition).
 
 Counters mirror the paper's: warnings fired (pool clock), reader restarts,
-preemptions, reclaimed pages, superblocks released/remapped, mapped pages.
+preemptions, reclaimed pages, superblocks released/remapped, mapped pages —
+plus the sharing layer's: pages allocated, prefix hits/tokens reused, COW
+copies, cache pages pinned, evictions.
 """
 
 from __future__ import annotations
@@ -62,7 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pagepool as pp
-from repro.core.vm import ReleaseStrategy
+from repro.core.vm import ReleaseStrategy, superblock_floor
 from .paged_decode import fused_decode_step, kv_storage_init
 
 
@@ -79,11 +99,17 @@ class Request:
     pages_held: int = 0  # host-side page COUNT (ids live on device)
     externally_reclaimed: bool = False  # a reclaimer raced us and owns the pages
     reclaim_watermark: int = 0  # pages_held at the moment of the race
+    # prefix sharing: block-table index -> shared page id (host mirror of the
+    # refcounted grants; shrinks as COW divergence converts shares to owns)
+    shared_chain: dict = dataclasses.field(default_factory=dict)
+    shared_held: int = 0  # how many of pages_held are shared (refcount > 1)
+    prefix_reused: int = 0  # prompt tokens whose prefill this request skipped
     _engine: "PagedServingEngine | None" = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
     def target_len(self) -> int:
+        """Final sequence length (prompt + full generation budget)."""
         return len(self.prompt) + self.max_new_tokens
 
     @property
@@ -126,6 +152,13 @@ class EngineStats:
     superblocks_remapped: int = 0  # cumulative remaps under pressure
     mapped_pages: int = 0  # current allocatable capacity (free + held)
     release_strategy: str = ReleaseStrategy.KEEP.value
+    # prefix-sharing / refcount accounting
+    pages_allocated: int = 0  # cumulative device page grants (incl. COW copies)
+    prefix_hits: int = 0  # admissions that matched a resident prefix
+    prefix_tokens_reused: int = 0  # prompt tokens granted without prefill
+    cow_copies: int = 0  # divergent writes resolved by a fused page copy
+    prefix_cache_pages: int = 0  # pages currently pinned by the donation index
+    prefix_evictions: int = 0  # cache entries evicted (pressure or cap)
 
 
 # -- jitted slot transitions (admission / release; no host syncs) -----------
@@ -133,11 +166,20 @@ class EngineStats:
 
 @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
 def _admit_slot(pool, bt, snap, lengths, last, active, pbuf, plen,
-                slot, page, prompt_row, prompt_n):
-    bt = bt.at[slot].set(-1).at[slot, 0].set(page)
-    snap = (snap.at[slot].set(0)
-            .at[slot, 0].set(pool.page_version[jnp.maximum(page, 0)]))
-    lengths = lengths.at[slot].set(0)
+                slot, row_pages, fresh_page, fresh_idx, start_len,
+                prompt_row, prompt_n):
+    """Install a slot's block-table row (shared prefix pages + optionally one
+    freshly allocated page at ``fresh_idx``; ``fresh_idx < 0`` = none) and
+    snapshot the CURRENT versions of every mapped page — the OA baseline the
+    fused step validates against.  ``start_len`` is the committed length the
+    shared prefix grants for free (0 without a match)."""
+    M = bt.shape[1]
+    row = jnp.where(jnp.arange(M) == fresh_idx, fresh_page, row_pages)
+    bt = bt.at[slot].set(row)
+    vers = jnp.where(row >= 0, pool.page_version[jnp.maximum(row, 0)],
+                     jnp.zeros((M,), jnp.uint32))
+    snap = snap.at[slot].set(vers.astype(jnp.uint32))
+    lengths = lengths.at[slot].set(start_len)
     last = last.at[slot].set(0)
     active = active.at[slot].set(True)
     pbuf = pbuf.at[slot].set(prompt_row)
@@ -178,7 +220,9 @@ class PagedServingEngine:
                  pages_per_superblock: int = pp.DEFAULT_PAGES_PER_SUPERBLOCK,
                  release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
                  release_quiescence: int | None = None,
-                 min_mapped_superblocks: int = 1):
+                 min_mapped_superblocks: int = 1,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: int | None = None):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -204,6 +248,22 @@ class PagedServingEngine:
         self._warning_batches = 0  # host mirror of pool.clock (no sync)
         self._idle_ticks = 0  # consecutive maintenance ticks with no pressure
 
+        # prefix-sharing host mirrors.  The index maps an exact token tuple
+        # (length a multiple of page_size) to the device page holding that
+        # tuple's LAST page_size tokens; a chain of k pages is recovered by
+        # looking up the k aligned prefixes.  The tail map holds one
+        # partially-filled page per aligned prefix for sub-page matching
+        # (the COW case).  The index owns ONE device reference per page;
+        # ``_sharers`` counts additional references held by running slots.
+        self.prefix_cache = prefix_cache
+        self._prefix_cache_cap = (max(1, num_pages // 2)
+                                  if prefix_cache_pages is None
+                                  else max(1, prefix_cache_pages))
+        self._prefix_index: dict[tuple, int] = {}
+        self._prefix_tail: dict[tuple, tuple[int, tuple]] = {}
+        self._cache_pages: dict[int, tuple] = {}  # page -> ("page"|"tail", key)
+        self._sharers: dict[int, int] = {}  # page -> live slot references
+
         # host mirrors of the superblock anchors (updated only at the
         # shrink/remap sync points, so the hot path stays transfer-free)
         self._total_sbs = self.pool.num_superblocks
@@ -228,8 +288,210 @@ class PagedServingEngine:
     # -- page accounting --------------------------------------------------------
 
     def _sync_sb_stats(self) -> None:
+        """Refresh the EngineStats superblock mirrors (host-side only)."""
         self.stats.superblocks_mapped = self._mapped_sbs
         self.stats.mapped_pages = self._mapped_pages
+
+    def _distinct_pages_in_use(self) -> int:
+        """Distinct live pages (each shared page counted ONCE — the release
+        floor and the admission guard must not double-bill sharers)."""
+        owned = sum(r.pages_held - r.shared_held for r in self.running)
+        shared = set(self._cache_pages)
+        shared.update(self._sharers)
+        return owned + len(shared)
+
+    # -- prefix sharing: match / share / donate / evict -------------------------
+
+    def _dec_sharer(self, page: int) -> None:
+        c = self._sharers.get(page, 0)
+        if c <= 1:
+            self._sharers.pop(page, None)
+        else:
+            self._sharers[page] = c - 1
+
+    def _match_prefix(self, prompt: list[int]):
+        """Longest resident prefix of ``prompt``: (m, chain, tail_page).
+
+        ``chain`` holds page ids for the first ``m // page_size`` fully
+        matched pages; ``tail_page`` (−1 = none) extends the match by
+        ``m % page_size`` tokens into a partially matching page (granted
+        copy-on-write: the new request's first write diverges it).  ``m`` is
+        capped at ``len(prompt) − 1`` — the last prompt token is always
+        recomputed, because its forward pass produces the first generated
+        token.  Host-side dictionary walk only: no device work."""
+        if not self.prefix_cache:
+            return 0, [], -1
+        ps = self.page_size
+        chain: list[int] = []
+        k = 0
+        while (k + 1) * ps <= len(prompt):
+            page = self._prefix_index.get(tuple(prompt[: (k + 1) * ps]))
+            if page is None:
+                break
+            chain.append(page)
+            k += 1
+        extra, tail_page = 0, -1
+        tail = self._prefix_tail.get(tuple(prompt[: k * ps]))
+        if tail is not None:
+            tp, ttoks = tail
+            rest = prompt[k * ps:]
+            while (extra < len(ttoks) and extra < len(rest)
+                   and ttoks[extra] == rest[extra]):
+                extra += 1
+            tail_page = tp if extra > 0 else -1
+        m = k * ps + extra
+        if m >= len(prompt):  # never grant the full prompt (see docstring)
+            m = len(prompt) - 1
+            k2, extra = divmod(m, ps)
+            if k2 < k:
+                tail_page = chain[k2] if extra > 0 else -1
+                chain = chain[:k2]
+            elif extra == 0:
+                tail_page = -1
+        if m <= 0:
+            return 0, [], -1
+        return m, chain, (tail_page if m % ps else -1)
+
+    def _drop_slot_ref(self, page: int, shared_ids: set, to_unshare: list) -> bool:
+        """Queue the slot's reference on ``page`` for a device unshare and
+        update the sharer mirror.  Returns True iff that drop is the
+        zero-transition (the page actually frees)."""
+        to_unshare.append(page)
+        if page in shared_ids:
+            frees = (self._sharers.get(page, 0) == 1
+                     and page not in self._cache_pages)
+            self._dec_sharer(page)
+            return frees
+        return page not in self._cache_pages  # owned: refcount 1 -> 0
+
+    def _donate_slot(self, req: Request) -> None:
+        """Finish-path release: donate the request's committed pages to the
+        prefix index (references TRANSFER — no device op, no version bump)
+        and unshare whatever the index does not take.  Reads the slot's
+        block-table row from the device — finish is an allowed sync point.
+        """
+        slot = req.slot
+        ps = self.page_size
+        row = [int(p) for p in np.asarray(jax.device_get(self._bt[slot]))]
+        seq = req.prompt + req.generated
+        k_full, t_extra = divmod(req.committed, ps)
+        shared_ids = set(req.shared_chain.values())
+        to_unshare: list[int] = []
+        freed = 0
+        covered = k_full + (1 if t_extra else 0)
+        for j in range(covered):
+            page = row[j]
+            if page < 0:  # defensive: a committed position must be mapped
+                continue
+            if j < k_full:
+                key = tuple(seq[: (j + 1) * ps])
+                existing = self._prefix_index.get(key)
+                if existing == page:
+                    # already indexed (we shared it at admission): drop the
+                    # slot's extra reference, the index keeps its own
+                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
+                elif existing is None and page not in self._cache_pages:
+                    self._prefix_index[key] = page
+                    self._cache_pages[page] = ("page", key)
+                    if page in shared_ids:
+                        self._dec_sharer(page)  # sharer ref becomes the
+                        # index's ref — refcount unchanged, no device op
+                else:
+                    # same content already cached under a different page:
+                    # keep the cache's copy, drop ours
+                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
+            else:  # the partially filled tail page (always owned: any shared
+                # tail was COW-diverged by this request's first write)
+                key = tuple(seq[: k_full * ps])
+                ttoks = tuple(seq[k_full * ps: req.committed])
+                if (key in self._prefix_tail or page in self._cache_pages
+                        or not ttoks):
+                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
+                else:
+                    self._prefix_tail[key] = (page, ttoks)
+                    self._cache_pages[page] = ("tail", key)
+                    if page in shared_ids:
+                        self._dec_sharer(page)
+        for j in range(covered, len(row)):  # uncommitted growth grants
+            if row[j] >= 0:
+                freed += self._drop_slot_ref(row[j], shared_ids, to_unshare)
+        if to_unshare:
+            self.pool = pp.unshare_pages(
+                self.pool, jnp.asarray(to_unshare, jnp.int32))
+            if freed:  # the device clock ticks only on a zero-transition
+                self._warning_batches += 1
+                self.stats.warnings_fired = self._warning_batches
+            self.stats.pages_reclaimed += freed
+        (self._bt, self._snap, self._len, self._last,
+         self._active) = _clear_slot(
+            self._bt, self._snap, self._len, self._last, self._active,
+            req.slot)
+        self.stats.prefix_cache_pages = len(self._cache_pages)
+        self._enforce_cache_cap()
+
+    def _evict_prefix(self, need_pages: int | None = None,
+                      freeable_only: bool = True) -> int:
+        """Evict cache entries leaf-first; returns pages actually FREED.
+
+        ``need_pages``: stop once that many pages freed (None = evict down
+        to the cap).  ``freeable_only``: skip pages still referenced by a
+        running slot (dropping the index's reference would free nothing).
+        One linear sweep: tails first (always leaves), then index keys
+        deepest-first — a chain link becomes a leaf the moment its extension
+        is evicted earlier in the SAME sweep, so chains shrink from the back
+        and shorter keys stay matchable.  Donation inserts every prefix of a
+        chain, so the only possible extension of a key is the key one page
+        longer — a per-key child count replaces the quadratic extension
+        scan.  One batched ``unshare_pages`` at the end; the clock — and its
+        host mirror — tick once iff any page hit zero."""
+        ps = self.page_size
+        children: dict[tuple, int] = {}
+        for k in self._prefix_index:
+            if len(k) > ps:
+                parent = k[: len(k) - ps]
+                children[parent] = children.get(parent, 0) + 1
+        candidates = (
+            [("tail", k) for k in sorted(self._prefix_tail, key=len, reverse=True)]
+            + [("page", k) for k in sorted(self._prefix_index, key=len, reverse=True)])
+        to_unshare: list[int] = []
+        freed = 0
+        for kind, key in candidates:
+            if need_pages is not None and freed >= need_pages:
+                break
+            if need_pages is None and len(self._cache_pages) <= self._prefix_cache_cap:
+                break
+            if kind == "page" and (children.get(key, 0) > 0
+                                   or key in self._prefix_tail):
+                continue  # a longer chain link or its tail must go first
+            page = (self._prefix_tail[key][0] if kind == "tail"
+                    else self._prefix_index[key])
+            if freeable_only and self._sharers.get(page, 0) > 0:
+                continue
+            if kind == "tail":
+                self._prefix_tail.pop(key)
+            else:
+                self._prefix_index.pop(key)
+                if len(key) > ps:
+                    parent = key[: len(key) - ps]
+                    children[parent] = children.get(parent, 0) - 1
+            self._cache_pages.pop(page, None)
+            to_unshare.append(page)
+            if self._sharers.get(page, 0) == 0:
+                freed += 1
+            self.stats.prefix_evictions += 1
+        if to_unshare:
+            self.pool = pp.unshare_pages(
+                self.pool, jnp.asarray(to_unshare, jnp.int32))
+            if freed:
+                self._warning_batches += 1
+                self.stats.warnings_fired = self._warning_batches
+            self.stats.pages_reclaimed += freed
+            self.stats.prefix_cache_pages = len(self._cache_pages)
+        return freed
+
+    def _enforce_cache_cap(self) -> None:
+        if len(self._cache_pages) > self._prefix_cache_cap:
+            self._evict_prefix(need_pages=None, freeable_only=False)
 
     def _pick_victim(self, exclude: Request | None = None):
         cands = [r for r in self.running if r is not exclude]
@@ -250,15 +512,42 @@ class PagedServingEngine:
         self.queue.append(victim)
         self.stats.preemptions += 1
 
-    def _free_slot(self, req: Request) -> None:
+    def _mirror_slot_release(self, req: Request) -> None:
+        """Host mirror of a whole-row device unshare: owned pages hit zero
+        (freed), shared pages lose this request's reference — a shared page
+        frees only if this was its last sharer AND the index holds no
+        reference.  The clock mirror ticks iff SOME page hit zero — exactly
+        the device's rule, so ``warnings_fired == pool.clock`` always."""
+        owned = req.pages_held - req.shared_held
+        freed_shared = sum(
+            1 for p in req.shared_chain.values()
+            if self._sharers.get(p, 0) == 1 and p not in self._cache_pages)
+        if owned > 0 or freed_shared:
+            self._warning_batches += 1
+            self.stats.warnings_fired = self._warning_batches
+        for p in req.shared_chain.values():
+            self._dec_sharer(p)
+        req.shared_chain = {}
+        req.shared_held = 0
+        self.stats.pages_reclaimed += owned + freed_shared
+
+    def _free_slot(self, req: Request, *, donate: bool = False) -> None:
+        """Release a slot's pages by DROPPING REFERENCES (``unshare``), not
+        by unconditional free: owned pages hit zero and reclaim optimistically
+        (version bump — in-flight readers fail validation and restart);
+        shared prefix pages merely lose this request's reference, so other
+        sharers and the cache keep reading them validly.  With ``donate``
+        (finish path, cache enabled) committed pages are offered to the
+        prefix index first — references transfer instead of dropping."""
         assert req.slot is not None
+        slot = req.slot
         if req.externally_reclaimed:
             # the racing reclaimer owns every page it saw (freeing those
             # again would double-push); only pages granted AFTER the race —
             # at most one, past the watermark — are still slot-owned
             if req.pages_held > req.reclaim_watermark:
                 self.pool = pp.free_pages(
-                    self.pool, self._bt[req.slot, req.reclaim_watermark:])
+                    self.pool, self._bt[slot, req.reclaim_watermark:])
                 self._warning_batches += 1
                 self.stats.warnings_fired = self._warning_batches
                 self.stats.pages_reclaimed += (
@@ -266,23 +555,21 @@ class PagedServingEngine:
             (self._bt, self._snap, self._len, self._last,
              self._active) = _clear_slot(
                 self._bt, self._snap, self._len, self._last,
-                self._active, req.slot)
+                self._active, slot)
             req.externally_reclaimed = False
+        elif donate and self.prefix_cache and req.committed > 0:
+            self._donate_slot(req)
         else:
             (self.pool, self._bt, self._snap, self._len, self._last,
              self._active) = _release_slot(
                 self.pool, self._bt, self._snap, self._len, self._last,
-                self._active, req.slot)
-            if req.pages_held > 0:
-                # the clock ticks only when real pages were freed — keep the
-                # host mirror on the same rule (an admitted slot always holds
-                # >= 1 page, but the guard keeps the mirror safe by design)
-                self._warning_batches += 1
-                self.stats.warnings_fired = self._warning_batches
-            self.stats.pages_reclaimed += req.pages_held
-        self._slots[req.slot] = None
+                self._active, slot)
+            self._mirror_slot_release(req)
+        self._slots[slot] = None
         req.slot = None
         req.pages_held = 0
+        req.shared_held = 0
+        req.shared_chain = {}
 
     # -- physical release / remap (paper §3.2 on the device pool) ---------------
 
@@ -343,17 +630,30 @@ class PagedServingEngine:
             return
         self._idle_ticks = 0
         # release only capacity no running request can ever demand again, so
-        # a mid-burst shrink never ping-pongs with the growth path's remap
+        # a mid-burst shrink never ping-pongs with the growth path's remap.
+        # Shared pages count ONCE: a request's future demand excludes the
+        # prefix pages it shares, and the distinct shared set (sharers +
+        # cache) is added back a single time (vm.superblock_floor contract).
         ps = self.page_size
-        demand = sum((r.target_len + ps - 1) // ps for r in self.running)
-        keep = max(self.min_mapped_superblocks,
-                   -(-demand // self.pages_per_superblock))
+        # a row still sharing its write-position (tail) page will REPLACE it
+        # with a freshly granted copy at its first divergent write, so its
+        # true future demand is one page beyond its block-table footprint —
+        # omit that and a floor-exact shrink releases the superblock the
+        # next step's COW grant needs (shrink/remap ping-pong)
+        demand = sum((r.target_len + ps - 1) // ps - r.shared_held
+                     + (1 if (r.committed // ps) in r.shared_chain else 0)
+                     for r in self.running)
+        shared_distinct = len(set(self._cache_pages) | set(self._sharers))
+        keep = superblock_floor(demand + shared_distinct,
+                                self.pages_per_superblock,
+                                self.min_mapped_superblocks)
         if self._mapped_sbs > keep:  # anything releasable? (host-side check)
             self.shrink(keep_superblocks=keep)
 
     # -- scheduling -------------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        """Queue a request (host-only; no device work until admission)."""
         req = Request(rid=next(self._next_rid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, _engine=self)
         self.queue.append(req)
@@ -369,68 +669,145 @@ class PagedServingEngine:
         self._prompt_cap = cap
 
     def _admit(self) -> None:
-        """Admission touches host state freely (allowed sync point)."""
+        """Admission touches host state freely (allowed sync point).
+
+        With the prefix cache on, the request's prompt is matched against
+        the resident index first: matched pages are granted SHARED (one
+        ``share_pages`` dispatch — refcount += 1, no copy, no prefill for
+        the covered tokens) and the slot starts with ``lengths`` already at
+        the match length.  A fresh page is allocated only when the first
+        write lands on a page boundary; a sub-page (tail) match defers even
+        that to the fused step's COW path."""
+        ps = self.page_size
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
-            need_total = (req.target_len + self.page_size - 1) // self.page_size
+            need_total = (req.target_len + ps - 1) // ps
             if need_total > min(self.num_pages, self.max_pages_per_seq):
                 raise MemoryError(
                     f"request {req.rid} needs {need_total} pages; the pool "
                     f"can never satisfy it (num_pages={self.num_pages})")
-            # Starvation guard: running rows that need a page THIS step have
-            # first claim on the free pool.  Without this, admission can keep
-            # stealing the page a preemption just freed for a starved row —
-            # an admit/starve/preempt livelock.  (Host-side arithmetic only:
-            # pages_held and _mapped_pages mirror the device anchors, so no
-            # sync.)  When mapped capacity is short but released superblocks
-            # exist, remap them instead of refusing/preempting.
-            held = sum(r.pages_held for r in self.running)
-            need_now = sum(1 for r in self.running
-                           if (r.committed // self.page_size) >= r.pages_held)
-            short = 1 + held + need_now - self._mapped_pages
+            m, chain, tail_page = self._match_prefix(req.prompt)
+            shared = chain + ([tail_page] if tail_page >= 0 else [])
+            # share BEFORE the alloc loop: the sharer mirror marks these
+            # pages so pressure eviction inside the loop cannot free them
+            if shared:
+                self.pool, share_ok = pp.share_pages(
+                    self.pool, jnp.asarray(shared, jnp.int32))
+                # admission is a sync point: check the device accepted every
+                # share.  ok=False means the host index named a FREE page —
+                # an index/pool desync that must fail loudly here, not
+                # surface later as two requests corrupting one KV page.
+                assert bool(share_ok), (
+                    f"prefix index named free page(s) among {shared} — "
+                    f"host cache mirrors diverged from the device pool")
+                for p in shared:
+                    self._sharers[p] = self._sharers.get(p, 0) + 1
+            need_fresh = (m % ps == 0)  # first write lands on a new page
+            pages = jnp.full((1,), -1, jnp.int32)
+            # Starvation guard — for EVERY admission: running rows that need
+            # a page THIS step have first claim on the free pool.  Without
+            # this, admission can keep stealing the page a preemption just
+            # freed for a starved row — an admit/starve/preempt livelock.
+            # (Host-side arithmetic only: the mirrors track the device
+            # anchors, so no sync.)  Shared pages count once; COW-pending
+            # rows — write position inside a still-shared page — count as
+            # needing a page, their next step allocates the copy.  A
+            # tail-match admission allocates nothing NOW but its first step
+            # demands a COW copy, so it reserves one page exactly like a
+            # fresh-page admission does.
+            used = self._distinct_pages_in_use()
+            need_now = sum(
+                1 for r in self.running
+                if (r.committed // ps) >= r.pages_held
+                or (r.committed // ps) in r.shared_chain)
+            short = 1 + used + need_now - self._mapped_pages
             if short > 0:
                 self._remap_for(short)
-                if 1 + held + need_now - self._mapped_pages > 0:
-                    break  # remap (if any) fell short: a partial remap must
-                    # not let admission steal a starved row's page
-            while True:
-                self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
-                if bool(ok):
-                    break
-                # released memory covers the need? remap before preempting
-                if self._remap_for(1):
-                    continue
-                victim = self._pick_victim(exclude=req)
-                if victim is None:
-                    return  # req waits for memory
-                self._preempt(victim)  # free pages, then retry the alloc
+                short = (1 + self._distinct_pages_in_use() + need_now
+                         - self._mapped_pages)
+                if short > 0 and self.prefix_cache:
+                    # cache-only pages cost no running request anything:
+                    # evict them before refusing admission (a pool pinned
+                    # entirely by the index must drain via eviction, not
+                    # dead-end into "exhausted with empty running set")
+                    self._evict_prefix(short)
+                    short = (1 + self._distinct_pages_in_use() + need_now
+                             - self._mapped_pages)
+                if short > 0:
+                    self._unshare_admission(req, shared)
+                    break  # remap + eviction fell short: a partial cover
+                    # must not let admission steal a starved row's page
+            if need_fresh:
+                ok = False
+                while True:
+                    self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
+                    if bool(ok):
+                        break
+                    # released memory covers the need? remap, then evict the
+                    # prefix cache, and only then preempt a running request
+                    if self._remap_for(1):
+                        continue
+                    if self.prefix_cache and self._evict_prefix(1) > 0:
+                        continue
+                    victim = self._pick_victim(exclude=req)
+                    if victim is None:
+                        self._unshare_admission(req, shared)
+                        return  # req waits for memory
+                    self._preempt(victim)  # free pages, then retry the alloc
             slot = self._slots.index(None)
             self._ensure_prompt_cap(len(req.prompt))
-            row = np.zeros((self._prompt_cap,), np.int32)
-            row[: len(req.prompt)] = req.prompt
+            prow = np.zeros((self._prompt_cap,), np.int32)
+            prow[: len(req.prompt)] = req.prompt
+            bt_row = np.full((self.max_pages_per_seq,), -1, np.int32)
+            bt_row[: len(shared)] = shared
+            fresh_idx = (m // ps) if need_fresh else -1
             (self._bt, self._snap, self._len, self._last, self._active,
              self._pbuf, self._plen) = _admit_slot(
                 self.pool, self._bt, self._snap, self._len, self._last,
                 self._active, self._pbuf, self._plen,
-                jnp.asarray(slot, jnp.int32), pages[0],
-                jnp.asarray(row), jnp.asarray(len(req.prompt), jnp.int32))
+                jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
+                pages[0], jnp.asarray(fresh_idx, jnp.int32),
+                jnp.asarray(m, jnp.int32),
+                jnp.asarray(prow), jnp.asarray(len(req.prompt), jnp.int32))
             self.queue.popleft()
             req.state = "running"
             req.slot = slot
-            req.pages_held = 1
+            req.committed = m
+            req.prefix_reused = m
+            req.shared_chain = dict(enumerate(shared))
+            req.shared_held = len(shared)
+            req.pages_held = len(shared) + (1 if need_fresh else 0)
             self._slots[slot] = req
             self.running.append(req)
+            if need_fresh:
+                self.stats.pages_allocated += 1
+            if m > 0:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_tokens_reused += m
             # a preemption above may have requeued the victim behind req;
             # keep admitting — the loop condition re-checks capacity
+
+    def _unshare_admission(self, req: Request, shared: list[int]) -> None:
+        """Back out the shared grants of an admission that could not secure
+        its fresh page (the request stays queued).  All these pages are
+        still cache-held, so no zero-transition — no clock tick."""
+        if not shared:
+            return
+        self.pool = pp.unshare_pages(self.pool, jnp.asarray(shared, jnp.int32))
+        for p in shared:
+            self._dec_sharer(p)
 
     def _pick_victim_and_preempt(self, starved: list[Request]) -> bool:
         """Evict to unblock ``starved`` rows: prefer the youngest NON-starved
         request (evicting a starved row would restart the work we are trying
         to unblock); if every running row is starved, evict the youngest of
         those — it both frees pages and withdraws its own demand.  Remap is
-        tried first: released superblocks cover starvation without costing
-        any running request its work."""
+        tried first (released superblocks cover starvation without costing
+        any running request its work), then prefix-cache eviction (cached
+        pages cost no request anything either), then preemption."""
         if self._remap_for(len(starved)):
+            return True
+        if self.prefix_cache and self._evict_prefix(len(starved)) > 0:
             return True
         cands = [r for r in self.running if r not in starved] or self.running
         if not cands:
@@ -452,10 +829,7 @@ class PagedServingEngine:
         """
         assert req in self.running and req.slot is not None
         self.pool = pp.free_pages(self.pool, self._bt[req.slot])
-        if req.pages_held > 0:  # clock ticks only for real reclamation
-            self._warning_batches += 1
-            self.stats.warnings_fired = self._warning_batches
-        self.stats.pages_reclaimed += req.pages_held
+        self._mirror_slot_release(req)
         req.externally_reclaimed = True
         req.reclaim_watermark = req.pages_held
 
@@ -477,7 +851,7 @@ class PagedServingEngine:
                else jax.random.fold_in(self._base_key, self._step_idx))
 
         (self.kv, self.pool, self._bt, self._snap, self._len, self._last,
-         nxt, valid, grant_ok) = fused_decode_step(
+         nxt, valid, grant_info) = fused_decode_step(
             self.params, self.kv, self.pool, self._bt, self._snap,
             self._len, self._last, self._active, self._pbuf, self._plen,
             key, self._temperature, cfg=self.cfg, impl=self.attn_impl,
@@ -485,16 +859,39 @@ class PagedServingEngine:
             pages_per_compute_block=self.pages_per_compute_block)
 
         # THE one host transfer of the steady-state step
-        tok_np, valid_np, grant_np = jax.device_get((nxt, valid, grant_ok))
+        tok_np, valid_np, grant_np = jax.device_get((nxt, valid, grant_info))
 
         # host mirror of the device-side page grants (before any preemption
-        # can reset a row's counters)
-        growth: dict[int, bool] = {}
+        # can reset a row's counters).  grant_info codes (paged_decode):
+        # 0 = none needed, 1 = fresh page, 2 = COW copy, -1 = starved.
+        cow_freed = False  # all COW decrefs land in ONE device unshare
+        # batch, so the device clock ticks AT MOST ONCE per step no matter
+        # how many pages hit zero — the mirror must follow the same rule
         for req in self.running:
-            needed = (req.committed // ps) >= req.pages_held
-            growth[req.rid] = needed
-            if needed and grant_np[req.slot]:
+            gi = int(grant_np[req.slot])
+            if gi == 1:
                 req.pages_held += 1  # grant landed (even if the row restarts)
+                self.stats.pages_allocated += 1
+            elif gi == 2:
+                # COW divergence: the fused step copied the shared page the
+                # row was about to write, repointed the block table at the
+                # copy and dropped the row's reference on the original.
+                # pages_held is unchanged (replaced in place); the share
+                # mirror shrinks — and if this row was the last sharer of an
+                # evicted page, the device freed it and ticked the clock.
+                self.stats.pages_allocated += 1
+                self.stats.cow_copies += 1
+                old = req.shared_chain.pop(req.committed // ps, None)
+                if old is not None:
+                    if (self._sharers.get(old, 0) == 1
+                            and old not in self._cache_pages):
+                        cow_freed = True
+                        self.stats.pages_reclaimed += 1
+                    self._dec_sharer(old)
+                    req.shared_held -= 1
+        if cow_freed:
+            self._warning_batches += 1
+            self.stats.warnings_fired = self._warning_batches
 
         if inject_preemption_of is not None and inject_preemption_of in self.running:
             # reclaim mid-flight, after the step launched: its results die
@@ -505,9 +902,8 @@ class PagedServingEngine:
             if req.state != "running":
                 continue  # preempted mid-flight; its row is dead anyway
             i = req.slot
-            needed = growth[req.rid]
             if not valid_np[i]:
-                if needed and not grant_np[i]:
+                if grant_np[i] < 0:
                     starved.append(req)  # stays running; retry after eviction
                 else:
                     # OA validation failure: a page was reclaimed since its
@@ -522,12 +918,18 @@ class PagedServingEngine:
             if len(req.generated) >= req.max_new_tokens:
                 req.state = "finished"
                 self.running.remove(req)
-                self._free_slot(req)  # retire: fires the warning
+                # retire: donate committed pages to the prefix index (cache
+                # on) or fire the warning and free (cache off)
+                self._free_slot(req, donate=True)
         if starved:
             self._pick_victim_and_preempt(starved)
         self.stats.steps += 1
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
+        """Drive admit/step/maintain until the queue drains (or max_steps).
+        Steady-state steps keep the sync-free contract: one fused dispatch,
+        one ``device_get``; host work happens only at the allowed sync
+        points (admission, preemption, finish, maintenance)."""
         t0 = time.time()
         for _ in range(max_steps):
             self._admit()

@@ -23,6 +23,17 @@ is a one-pass segmented pop that prefers PARTIAL superblocks and never
 touches UNMAPPED (physically released) ones — the anchor walk happens
 inside the same fused dispatch, so the anti-fragmentation and release
 machinery costs the hot path zero extra host syncs.
+
+Copy-on-write for shared prefix pages (the refcount layer, hot-path side):
+a row whose next token lands in a page with refcount > 1 — a page it
+shares with other requests and/or the engine's prefix cache — must not
+write in place.  The fused step allocates a fresh page for such rows in
+the SAME batched grant that serves ordinary growth, copies the shared
+page's KV into it (a batched gather/scatter over the arena, still inside
+the one dispatch), repoints the row's block table at the copy and drops
+the row's reference on the original (``unshare``: no version bump while
+other holders remain).  The engine learns what happened from the per-row
+``grant_info`` code in the step's single ``device_get``.
 """
 
 from __future__ import annotations
@@ -39,12 +50,15 @@ from repro.models.transformer import embed_tokens, unembed
 
 
 def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """The persistent all-layer KV arena [L, P, page, Hkv, D] (palloc: pages
+    stay addressable forever; stale reads validate, never fault)."""
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def _decode_core(params, kv, block_tables, lengths, tokens, *, cfg,
-                 impl: str = "ref", pages_per_compute_block: int = 1):
+                 impl: str = "ref", pages_per_compute_block: int = 1,
+                 write_ok=None):
     assert cfg.family in ("dense", "moe", "vlm"), "paged decode: decoder LMs only"
     B = tokens.shape[0]
     page_size = kv["k"].shape[2]
@@ -55,6 +69,12 @@ def _decode_core(params, kv, block_tables, lengths, tokens, *, cfg,
     pages = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
     drop = kv["k"].shape[1]  # OOB page id -> dropped write
     pidx = jnp.where(pages >= 0, pages, drop)
+    if write_ok is not None:
+        # rows denied this step's page grant must not append: a starved COW
+        # row still points at the SHARED page it failed to diverge from, and
+        # an in-place write there would corrupt every other holder's KV
+        # without any version bump to warn them
+        pidx = jnp.where(write_ok, pidx, drop)
 
     def layer(x, scanned):
         blk, kl, vl = scanned  # kl/vl [P, page, Hkv, D]
@@ -116,9 +136,13 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
       prompt_buf    [B, cap] int32 / prompt_len [B] int32 — prompt replay
       key           PRNG key for sampling; temperature [] f32 (greedy=False)
 
-    Fused pipeline: (1) batched page growth — rows whose new token lands on
-    an unmapped page get one page from the pool via the prefix-granting
-    batch allocator, with the grant's version folded into the snapshot;
+    Fused pipeline: (1) batched page growth + copy-on-write — rows whose
+    new token lands on an unmapped page get one page from the pool via the
+    prefix-granting batch allocator; rows whose new token lands in a SHARED
+    page (refcount > 1 — a prompt-prefix page granted by the engine's
+    prefix cache) get a fresh page too, the shared page's KV is copied into
+    it and the row's reference on the original is dropped (COW divergence),
+    with the grant's version folded into the snapshot either way;
     (2) input routing — prompt token while ``lengths < prompt_len``, else
     the previous sample; (3) model math (KV append + paged attention);
     (4) on-device token selection; (5) fused OA validation against the
@@ -127,25 +151,50 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     starved; only valid rows advance ``lengths``/``last_tok``.
 
     Returns (kv, pool, block_tables, snapshot, lengths, last_tok,
-    tokens [B] int32, valid [B] bool, grant_ok [B] bool).  The engine does a
-    single ``device_get`` of the last three.
+    tokens [B] int32, valid [B] bool, grant_info [B] int32).  The engine
+    does a single ``device_get`` of the last three.  ``grant_info`` codes:
+    0 = no page needed, 1 = fresh page granted, 2 = COW copy performed,
+    −1 = page needed but the pool is dry (the row is starved — it did not
+    advance and the scheduler must reclaim/remap before it can).
     """
     B = block_tables.shape[0]
     page_size = kv["k"].shape[2]
+    num_pages = kv["k"].shape[1]
     rows = jnp.arange(B)
 
-    # (1) batched page growth — the fused alloc_pages_batch path
+    # (1) batched page growth + COW — the fused alloc_pages_batch path
     page_idx = lengths // page_size
     cur_page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
-    need = (active & (cur_page < 0)).astype(jnp.int32)
+    cur_rc = pool.page_refcount[jnp.clip(cur_page, 0, num_pages - 1)]
+    need_new = active & (cur_page < 0)
+    # the write target is shared: diverge onto a private copy before the
+    # KV append below can touch it
+    need_copy = active & (cur_page >= 0) & (cur_rc > 1)
+    need = (need_new | need_copy).astype(jnp.int32)
     pool, grants, _ = pp._alloc_pages_batch_impl(pool, need, 1)
     g = grants[:, 0]
+    granted = g >= 0
+    # COW: copy the shared page's KV into the fresh copy (whole-page
+    # gather/scatter across all layers; OOB src/dst rows are dropped)
+    cow = need_copy & granted
+    src = jnp.where(cow, cur_page, num_pages)
+    dst = jnp.where(cow, g, num_pages)
+    src_c = jnp.clip(src, 0, num_pages - 1)
+    kv = {"k": kv["k"].at[:, dst].set(kv["k"][:, src_c], mode="drop"),
+          "v": kv["v"].at[:, dst].set(kv["v"][:, src_c], mode="drop")}
+    # ...and drop the row's reference on the original (other holders keep
+    # their versions valid; if this was the LAST reference the page frees
+    # and its version bumps — correct either way, all in this dispatch)
+    pool = pp._unshare_pages_impl(pool, jnp.where(cow, cur_page, -1))
     block_tables = block_tables.at[rows, page_idx].set(
-        jnp.where(g >= 0, g, cur_page))
+        jnp.where(granted, g, cur_page))
     snapshot = snapshot.at[rows, page_idx].set(
-        jnp.where(g >= 0, pool.page_version[jnp.maximum(g, 0)],
+        jnp.where(granted, pool.page_version[jnp.maximum(g, 0)],
                   snapshot[rows, page_idx]))
-    grant_ok = (need == 0) | (g >= 0)
+    grant_ok = (need == 0) | granted
+    grant_info = jnp.where(
+        need == 0, 0,
+        jnp.where(~granted, -1, jnp.where(cow, 2, 1))).astype(jnp.int32)
 
     # (2) next input token: replay the prompt, then feed back the sample
     cap = prompt_buf.shape[1]
@@ -155,10 +204,10 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
         jnp.take_along_axis(prompt_buf, ppos[:, None], axis=1)[:, 0],
         last_tok)
 
-    # (3) model math
+    # (3) model math (starved rows' appends are masked — see _decode_core)
     logits, kv = _decode_core(
         params, kv, block_tables, lengths, tok_in, cfg=cfg, impl=impl,
-        pages_per_compute_block=pages_per_compute_block)
+        pages_per_compute_block=pages_per_compute_block, write_ok=grant_ok)
 
     # (4) on-device token selection — logits never leave the device
     if greedy:
@@ -174,4 +223,4 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     lengths = jnp.where(valid, lengths + 1, lengths)
     last_tok = jnp.where(valid, nxt, last_tok)
     return (kv, pool, block_tables, snapshot, lengths, last_tok,
-            nxt, valid, grant_ok)
+            nxt, valid, grant_info)

@@ -148,6 +148,75 @@ def test_superblock_interleavings_never_dup_or_leak_unmapped(data):
         assert int(pool.free_top) == expect_free
 
 
+@given(st.data())
+@settings(**SETTINGS)
+def test_share_unshare_free_release_interleavings(data):
+    """Any interleaving of alloc / share_pages / unshare_pages / free_pages /
+    release_empty_superblocks / map_superblocks keeps the refcount layer
+    sound: a refcount never goes negative, a page with holders is never
+    granted to a new owner, and a superblock containing any refcount > 0
+    page can never be released (ISSUE invariants, pinned)."""
+    npages = data.draw(st.integers(4, 20))
+    K = data.draw(st.integers(2, 5))
+    pool = pp.pool_init(npages, pages_per_superblock=K)
+    K = pool.pages_per_superblock
+    S = pool.num_superblocks
+    refs: dict[int, int] = {}  # host model: page -> expected refcount
+    for _ in range(data.draw(st.integers(1, 30))):
+        op = data.draw(st.sampled_from(
+            ["alloc", "share", "unshare", "free", "release", "map"]))
+        live = sorted(refs)
+        if op == "alloc":
+            k = data.draw(st.integers(1, 4))
+            pool, pages, ok = pp.alloc_pages(pool, k)
+            got = [int(p) for p in np.asarray(pages) if p >= 0]
+            for p in got:
+                assert p not in refs, "granted a page that still has holders"
+                refs[p] = 1
+        elif op == "share" and live:
+            batch = data.draw(st.lists(st.sampled_from(live), min_size=1,
+                                       max_size=4))
+            pool, ok = pp.share_pages(pool, jnp.asarray(batch, jnp.int32))
+            assert bool(ok)
+            for p in batch:
+                refs[p] += 1
+        elif op == "share":  # no live pages: sharing free ids must refuse
+            pool, ok = pp.share_pages(pool, jnp.asarray([0], jnp.int32))
+            assert not bool(ok)
+        elif op in ("unshare", "free") and live:
+            batch = data.draw(st.lists(st.sampled_from(live), min_size=1,
+                                       max_size=4, unique=True))
+            fn = pp.unshare_pages if op == "unshare" else pp.free_pages
+            pool = fn(pool, jnp.asarray(batch, jnp.int32))
+            for p in batch:
+                refs[p] -= 1
+                if refs[p] == 0:
+                    del refs[p]
+        elif op == "release":
+            pool, _, _ = pp.release_empty_superblocks(
+                pool, jnp.asarray(data.draw(st.integers(0, S)), jnp.int32),
+                jnp.asarray(data.draw(st.integers(0, S)), jnp.int32))
+        elif op == "map":
+            pool, _, _ = pp.map_superblocks(
+                pool, jnp.asarray(data.draw(st.integers(0, S)), jnp.int32))
+        rc = np.asarray(pool.page_refcount)
+        assert (rc >= 0).all(), "refcount went negative"
+        for p in range(npages):
+            assert rc[p] == refs.get(p, 0), "device/host refcount divergence"
+        mapped = np.asarray(pool.sb_mapped)
+        for p in refs:
+            assert mapped[p // K], "released a superblock with refcount > 0"
+    # extra decrefs of already-free pages clamp at zero (no corruption)
+    if npages > 0:
+        before = int(pool.free_top)
+        pool = pp.unshare_pages(pool, jnp.arange(npages, dtype=jnp.int32))
+        rc = np.asarray(pool.page_refcount)
+        for p in range(npages):
+            assert rc[p] == max(0, refs.get(p, 0) - 1)
+        refs = {p: c - 1 for p, c in refs.items() if c > 1}
+        assert int(pool.free_top) >= before
+
+
 def test_append_and_gather_roundtrip():
     kv = pp.kv_pages_init(8, 4, 2, 8, dtype=jnp.float32)
     bt = jnp.array([[2, 5, -1, -1]], jnp.int32)

@@ -1,0 +1,270 @@
+"""Refcounted prefix sharing: admission matches resident prefixes, shared
+pages skip prefill, COW diverges writes into shared tail pages, finish
+donates to the index, preemption decrefs instead of freeing, and pressure
+evicts the cache before preempting — with outputs always equal to the
+unshared baseline and the host clock mirror exactly tracking the device."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import pagepool as pp
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+CFG = reduced(get_config("olmo-1b"))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_pages_per_seq", 8)
+    kw.setdefault("prefix_cache", True)
+    return PagedServingEngine(CFG, params, **kw)
+
+
+def _baseline(params, prompt, n):
+    eng = PagedServingEngine(CFG, params, num_pages=64, page_size=4,
+                             max_batch=1, max_pages_per_seq=8)
+    r = eng.submit(prompt, n)
+    eng.run()
+    return r.generated
+
+
+SYS = list(range(40, 48))  # 8 tokens = 2 full pages at page_size 4
+
+
+def test_prefix_hit_skips_prefill_and_matches_baseline(params):
+    prompts = [SYS + [100 + i, 200 + i] for i in range(4)]
+    base = [_baseline(params, p, 5) for p in prompts]
+    eng = _engine(params)
+    reqs = [eng.submit(p, 5) for p in prompts]
+    stats = eng.run()
+    for r, b in zip(reqs, base):
+        assert r.state == "finished" and r.generated == b
+    # the first batch seeds the cache; later admissions share the 2-page
+    # system prompt and start decode 8 tokens in
+    assert stats.prefix_hits >= 2
+    assert stats.prefix_tokens_reused >= 16
+    assert any(r.prefix_reused == 8 for r in reqs)
+    assert stats.warnings_fired == int(eng.pool.clock)
+
+
+def test_sharing_reduces_page_allocations(params):
+    prompts = [SYS + [100 + i, 200 + i] for i in range(6)]
+    stats = {}
+    for on in (False, True):
+        eng = _engine(params, prefix_cache=on, max_batch=2)
+        reqs = [eng.submit(p, 5) for p in prompts]
+        stats[on] = eng.run()
+        assert all(r.state == "finished" for r in reqs)
+    assert stats[True].pages_allocated < stats[False].pages_allocated
+
+
+def test_cow_diverges_shared_tail_page(params):
+    """A sub-page (tail) match grants a partially filled page copy-on-write;
+    the sharer's first write must copy, not corrupt the cached original."""
+    prompt = list(range(40, 50))  # 10 tokens: committed=11 leaves a tail
+    base1 = _baseline(params, prompt, 1)
+    base5 = _baseline(params, prompt, 5)
+    eng = _engine(params)
+    r1 = eng.submit(prompt, 1)
+    eng.run()
+    assert r1.generated == base1
+    r2 = eng.submit(prompt, 5)  # identical prompt: tail match at token 9
+    eng.run()
+    assert eng.stats.cow_copies >= 1
+    assert r2.generated == base5
+    # the donor's cached pages survived the divergent write: a third
+    # identical request still matches and still decodes identically
+    r3 = eng.submit(prompt, 5)
+    eng.run()
+    assert r3.generated == base5
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+
+
+def test_shared_pages_appear_in_both_block_tables(params):
+    """Sharing is real aliasing: the same physical page id sits in two live
+    block tables while the refcount tracks both holders."""
+    prompts = [SYS + [101, 201], SYS + [102, 202], SYS + [103, 203]]
+    eng = _engine(params, max_batch=3)
+    r0 = eng.submit(prompts[0], 5)
+    eng.run()  # seed the cache
+    rs = [eng.submit(p, 8) for p in prompts[1:]]
+    eng._admit()
+    pages = [set(r.pages) for r in rs]
+    common = pages[0] & pages[1]
+    assert common, "prefix pages must be aliased across the two block tables"
+    rc = np.asarray(eng.pool.page_refcount)
+    for p in common:
+        assert rc[p] >= 3  # two sharers + the cache's own reference
+    eng.run()
+    for r, p in zip(rs, prompts[1:]):
+        assert r.generated == _baseline(params, p, 8)
+    del r0
+
+
+def test_preemption_decrefs_shared_pages(params):
+    """Preempting a sharer must NOT free (or version-bump) the shared prefix
+    pages other holders still read."""
+    eng = _engine(params, max_batch=3)
+    r0 = eng.submit(SYS + [101, 201], 5)
+    eng.run()
+    cache_pages = list(eng._cache_pages)
+    assert cache_pages
+    vers_before = np.asarray(eng.pool.page_version)[cache_pages].copy()
+    ra = eng.submit(SYS + [102, 202], 8)
+    rb = eng.submit(SYS + [103, 203], 8)
+    eng._admit()
+    assert ra.shared_held > 0 and rb.shared_held > 0
+    eng._preempt(rb)  # decref: rb's shared refs drop, pages stay live
+    rc = np.asarray(eng.pool.page_refcount)
+    vers_after = np.asarray(eng.pool.page_version)[cache_pages]
+    np.testing.assert_array_equal(vers_before, vers_after)
+    for p in set(ra.shared_chain.values()):
+        assert rc[p] >= 2  # ra + cache still hold it
+    eng.run()
+    assert ra.state == "finished" and rb.state == "finished"
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+    del r0
+
+
+def test_pressure_evicts_cache_before_preempting(params):
+    """A full pool with an idle cache must evict cache pages (costing no
+    running request anything) rather than preempt."""
+    prompts = [SYS + [100 + i, 200 + i] for i in range(6)]
+    base = [_baseline(params, p, 6) for p in prompts]
+    eng = _engine(params, num_pages=8, max_batch=3)
+    reqs = [eng.submit(p, 6) for p in prompts]
+    stats = eng.run()
+    for r, b in zip(reqs, base):
+        assert r.state == "finished" and r.generated == b
+    assert stats.prefix_evictions > 0
+    assert stats.warnings_fired == int(eng.pool.clock)
+    # post-drain invariant: the only live references are the cache's
+    rc = np.asarray(eng.pool.page_refcount)
+    assert int((rc > 0).sum()) == len(eng._cache_pages)
+    assert int(eng.pool.free_top) == eng.num_pages - len(eng._cache_pages)
+
+
+def test_cache_cap_is_enforced(params):
+    eng = _engine(params, num_pages=64, prefix_cache_pages=3, max_batch=2)
+    for i in range(5):
+        eng.submit(SYS + [100 + i, 200 + i], 5)
+    eng.run()
+    assert len(eng._cache_pages) <= 3
+    assert eng.stats.prefix_cache_pages == len(eng._cache_pages)
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+
+
+def test_release_never_unmaps_cache_or_shared_pages(params):
+    """shrink() may only park EMPTY superblocks: superblocks holding cached
+    (refcount >= 1) prefix pages must stay mapped, and the cached pages must
+    still validate afterwards."""
+    eng = _engine(params, num_pages=32, pages_per_superblock=4, max_batch=2)
+    r = eng.submit(SYS + [101, 201], 5)
+    eng.run()
+    cache_pages = jnp.asarray(sorted(eng._cache_pages), jnp.int32)
+    snap = pp.snapshot_versions(eng.pool, cache_pages)
+    eng.shrink()
+    mapped = np.asarray(eng.pool.sb_mapped)
+    for p in sorted(eng._cache_pages):
+        assert mapped[p // eng.pages_per_superblock], \
+            "released a superblock holding a live cached page"
+    assert bool(pp.validate_read(eng.pool, cache_pages, snap))
+    # and the cache still serves hits after the shrink
+    r2 = eng.submit(SYS + [102, 202], 5)
+    eng.run()
+    assert r2.state == "finished"
+    assert eng.stats.prefix_hits >= 1
+    del r
+
+
+def test_starved_cow_row_never_writes_the_shared_page(params):
+    """A row that needs a COW copy but is denied the grant (pool dry) must
+    NOT append into the shared page it still points at — an in-place write
+    there would corrupt every other holder's KV with no version bump to
+    warn them.  The fused step masks the append for starved rows."""
+    prompt = list(range(40, 50))  # 10 tokens: donor leaves a tail at 8..10
+    # the sharer diverges AT the write position (token 9), so an unmasked
+    # in-place append would write DIFFERENT KV over the donor's token 9
+    prompt2 = prompt[:9] + [999]
+    base5 = _baseline(params, prompt2, 5)
+    eng = _engine(params, num_pages=8, max_batch=2)
+    r1 = eng.submit(prompt, 1)
+    eng.run()  # donate: 2 full pages + 1 tail page cached
+    tail_pages = [p for p, (kind, _) in eng._cache_pages.items()
+                  if kind == "tail"]
+    assert tail_pages
+    r2 = eng.submit(prompt2, 5)  # tail match: first write needs a COW grant
+    eng._admit()
+    assert r2.shared_held == 3 and r2.pages_held == 3  # no fresh page
+    # drain the pool from under the engine so the COW grant must starve
+    free = int(eng.pool.free_top)
+    eng.pool, held, ok = pp.alloc_pages(eng.pool, free)
+    assert bool(ok)
+    kv_before = np.asarray(eng.kv["k"][:, tail_pages]).copy()
+    eng.step()  # r2's COW is starved this step
+    kv_after = np.asarray(eng.kv["k"][:, tail_pages])
+    np.testing.assert_array_equal(kv_before, kv_after)
+    # the starved row did not advance (it may have been preempted outright —
+    # it is the only victim candidate — but it must not have committed)
+    assert r2.committed in (0, 9)
+    # hand the pages back (test-only manipulation: mirror the clock tick)
+    eng.pool = pp.free_pages(eng.pool, held)
+    eng._warning_batches += 1
+    eng.stats.warnings_fired = eng._warning_batches
+    eng.run()
+    assert r2.generated == base5  # retried cleanly once memory returned
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+    del r1
+
+
+def test_admission_evicts_a_cache_saturated_pool(params):
+    """A pool pinned entirely by the donation index (cap == num_pages) must
+    admit the next request by EVICTING cache pages, not dead-end in a
+    MemoryError with an empty running set."""
+    eng = _engine(params, num_pages=8, max_batch=1, prefix_cache_pages=8)
+    r1 = eng.submit(SYS + [101, 201], 10)  # 20 tokens -> 5 of 8 pages pinned
+    eng.run()  # drain: every page the request touched is now cache-pinned
+    assert len(eng._cache_pages) == 5
+    assert int(eng.pool.free_top) == 3
+    # no prefix in common, needs 4 pages > the 3 free ones
+    r2 = eng.submit([900 + i for i in range(8)], 6)
+    stats = eng.run()  # must evict its way in, not raise
+    assert r2.state == "finished"
+    assert stats.prefix_evictions > 0
+    assert stats.warnings_fired == int(eng.pool.clock)
+    # the extreme case: EVERY page cache-pinned, zero free at admission —
+    # the starvation guard itself must evict rather than refuse forever
+    eng2 = _engine(params, num_pages=8, max_batch=1, prefix_cache_pages=8)
+    r3 = eng2.submit(SYS + [101, 201], 22)  # 32 tokens = all 8 pages
+    eng2.run()
+    assert len(eng2._cache_pages) == 8 and int(eng2.pool.free_top) == 0
+    r4 = eng2.submit([800 + i for i in range(8)], 6)
+    stats2 = eng2.run()
+    assert r4.state == "finished"
+    assert stats2.prefix_evictions > 0
+    assert stats2.warnings_fired == int(eng2.pool.clock)
+    del r1, r3
+
+
+def test_cache_off_is_identical_to_pre_sharing_engine(params):
+    """prefix_cache=False keeps the exact pre-sharing behaviour: no hits, no
+    donations, pages freed at finish (pool drains back to full)."""
+    eng = _engine(params, prefix_cache=False)
+    reqs = [eng.submit(SYS + [100 + i], 5) for i in range(4)]
+    stats = eng.run()
+    assert all(r.state == "finished" for r in reqs)
+    assert stats.prefix_hits == 0 and stats.prefix_cache_pages == 0
+    assert int(eng.pool.free_top) == eng.num_pages
+    assert np.asarray(eng.pool.page_refcount).max() == 0
+    assert stats.warnings_fired == int(eng.pool.clock)

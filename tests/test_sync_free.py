@@ -1,7 +1,7 @@
 """The sync-free invariant of the serving hot path (PERF.md).
 
 A steady-state decode step must perform at most ONE host transfer — the
-single ``device_get`` of ([B] tokens, [B] valid, [B] grant-ok).  The pre-PR
+single ``device_get`` of ([B] tokens, [B] valid, [B] grant-info).  The pre-PR
 engine did O(pages) transfers per step: logits [B, vocab], two version
 snapshots, a ``bool(ok)`` per allocated page, plus per-request block-table
 re-uploads.  This test instruments every device→host entry point (device_get
@@ -74,6 +74,33 @@ def test_steady_state_step_is_single_transfer(monkeypatch, params):
     assert counter.count <= nsteps, (
         f"{counter.count} host transfers across {nsteps} steady-state steps "
         f"(sync-free hot path allows at most 1 per step)")
+
+
+def test_steady_state_single_transfer_with_prefix_cache(monkeypatch, params):
+    """Sharing must not cost the hot path anything: with the prefix cache on
+    and a resident prefix being shared, steady-state decode is still one
+    transfer per step (matching/sharing happen at admission, donation at
+    finish — the allowed sync points)."""
+    eng = PagedServingEngine(CFG, params, num_pages=32, page_size=4,
+                             max_batch=2, max_pages_per_seq=8,
+                             prefix_cache=True)
+    r0 = eng.submit(list(range(1, 9)), 4)
+    eng.run()  # seed the prefix index
+    assert r0.state == "finished"
+    eng.submit(list(range(1, 9)) + [11], 14)  # shares the donated prefix
+    eng.submit(list(range(1, 9)) + [12], 14)
+    eng._admit()
+    assert eng.stats.prefix_hits >= 1
+    for _ in range(3):
+        eng.step()
+    counter = _TransferCounter()
+    _instrument(monkeypatch, counter)
+    nsteps = 6
+    for _ in range(nsteps):
+        eng.step()
+    assert counter.count <= nsteps, (
+        f"{counter.count} host transfers across {nsteps} steady-state steps "
+        f"with prefix sharing active (allowed at most 1 per step)")
 
 
 def test_steady_state_results_still_correct(params):

@@ -1,0 +1,87 @@
+"""Docs hygiene gate (CI): broken intra-repo markdown links + missing
+docstrings on public functions in ``src/repro/core`` and ``src/repro/serving``.
+
+Usage: python tools/check_docs.py  (exit 1 on any finding)
+
+Also importable — tests/test_docs.py runs the same checks tier-1 so a
+broken link fails locally before it fails the CI docs job.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCSTRING_DIRS = ("src/repro/core", "src/repro/serving")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def markdown_files():
+    """Every tracked-tree markdown file (skips caches and hidden dirs)."""
+    return [p for p in REPO.rglob("*.md")
+            if not any(part.startswith(".") or part == "__pycache__"
+                       for part in p.relative_to(REPO).parts[:-1])]
+
+
+def check_markdown_links() -> list[str]:
+    """Intra-repo markdown links must resolve to an existing file/dir."""
+    problems = []
+    for md in markdown_files():
+        text = md.read_text(encoding="utf-8")
+        for target in _LINK.findall(text):
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return problems
+
+
+def _public_defs(tree: ast.Module):
+    """(name, node) for public module-level functions and public methods of
+    public classes — the API surface the OA contracts live on."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield node.name, node
+        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            for sub in node.body:
+                if (isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and not sub.name.startswith("_")):
+                    yield f"{node.name}.{sub.name}", sub
+
+
+def check_docstrings() -> list[str]:
+    """Public functions/methods in core/ and serving/ need docstrings."""
+    problems = []
+    for d in DOCSTRING_DIRS:
+        for py in sorted((REPO / d).glob("*.py")):
+            tree = ast.parse(py.read_text(encoding="utf-8"))
+            if ast.get_docstring(tree) is None:
+                problems.append(f"{py.relative_to(REPO)}: missing module docstring")
+            for name, node in _public_defs(tree):
+                if ast.get_docstring(node) is None:
+                    problems.append(
+                        f"{py.relative_to(REPO)}:{node.lineno}: "
+                        f"public `{name}` missing docstring")
+    return problems
+
+
+def main() -> int:
+    problems = check_markdown_links() + check_docstrings()
+    for p in problems:
+        print(f"docs-check: {p}")
+    print(f"docs-check: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
