@@ -1,0 +1,144 @@
+"""Chunked-prefill throughput: C prompt tokens per dispatch vs token-at-a-time.
+
+The long-prompt serving shape: every request carries a 256-token prompt and
+a short generation budget.  Token-at-a-time replay burns one full fused
+dispatch — and one OA snapshot/validate pass — per prompt token, so the
+first generated token is 256 dispatches away.  With ``prefill_chunk=C`` the
+same prompt replays in ceil(256/C) dispatches: one multi-page grant, one
+chunked KV append, one in-chunk-causal attention pass and ONE version
+validation cover C tokens (the paper's batched-validation amortization
+applied along the sequence axis).
+
+Workload: ``N_REQUESTS`` identical-shape requests through a batch-4 engine,
+submitted upfront so waves overlap exactly as continuous batching schedules
+them.  Both engines run the identical model/config/workload; the measured
+ratios isolate the chunk axis.  Like ``decode_throughput`` this is a
+scheduler benchmark (tiny one-layer model, CPU oracle): track the RATIOS —
+dispatches-to-first-token and end-to-end generated tokens/sec — not the
+absolute numbers.
+
+Emits ``BENCH_prefill.json`` with the two gates ``benchmarks/run.py
+--check`` enforces: chunked prefill reaches the first generated token in
+<= 1/4 the dispatches of token-at-a-time at C=16, and >= 1.5x end-to-end
+generated tokens/sec on the long-prompt workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+BATCH = 4
+PAGE_SIZE = 4
+PROMPT_LEN = 256
+CHUNK = 16
+NUM_PAGES = 320  # ample: the comparison isolates prefill, not preemption
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_prefill.json"
+
+
+def _workload(n_requests: int, max_new: int, seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, 500, (PROMPT_LEN,)).tolist(), max_new)
+            for _ in range(n_requests)]
+
+
+def _drive(params, cfg, reqs, *, chunk: int):
+    eng = PagedServingEngine(
+        cfg, params, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+        max_batch=BATCH,
+        max_pages_per_seq=(PROMPT_LEN + reqs[0][1]) // PAGE_SIZE + 2,
+        prefill_chunk=chunk)
+    handles = [eng.submit(p, n) for p, n in reqs]
+    stats = eng.run()
+    assert all(r.state == "finished" for r in handles)
+    gen_tokens = sum(len(r.generated) for r in handles)
+    return stats, gen_tokens
+
+
+def run(quick: bool = True):
+    cfg = dataclasses.replace(reduced(get_config("olmo-1b")), n_layers=1)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n_requests = 8 if quick else 16
+    max_new = 16 if quick else 32
+    reqs = _workload(n_requests, max_new)
+
+    # warmup both engines (compile: the C=1 and C=CHUNK executables)
+    _drive(params, cfg, reqs, chunk=CHUNK)
+    _drive(params, cfg, reqs, chunk=1)
+
+    # interleaved best-of-N: min-time filters shared-CPU scheduler noise.
+    # TTFT dispatches are structural (identical across reps) — taken from
+    # the best run's stats.
+    reps = 3 if quick else 5
+    best = {}
+    for _ in range(reps):
+        for chunk in (CHUNK, 1):
+            stats, gen = _drive(params, cfg, reqs, chunk=chunk)
+            tps = gen / max(stats.wall_seconds, 1e-9)
+            if chunk not in best or tps > best[chunk][0]:
+                best[chunk] = (tps, stats, gen)
+
+    tps_c, s_c, gen_c = best[CHUNK]
+    tps_t, s_t, gen_t = best[1]
+    assert gen_c == gen_t  # identical workload either way
+    speedup = tps_c / tps_t
+    ttft_ratio = s_c.mean_ttft_steps / max(s_t.mean_ttft_steps, 1e-9)
+
+    record = {
+        "workload": {
+            "batch": BATCH, "page_size": PAGE_SIZE, "chunk": CHUNK,
+            "n_requests": n_requests, "prompt_len": PROMPT_LEN,
+            "max_new": max_new, "num_pages": NUM_PAGES, "quick": quick,
+        },
+        "chunked": {
+            "gen_tokens_per_second": round(tps_c, 1),
+            "generated_tokens": gen_c,
+            "steps": s_c.steps,
+            "chunked_steps": s_c.chunked_steps,
+            "prefill_tokens_chunked": s_c.prefill_tokens_chunked,
+            "mean_ttft_steps": round(s_c.mean_ttft_steps, 1),
+            "mean_ttft_seconds": round(s_c.mean_ttft_seconds, 4),
+            "pages_allocated": s_c.pages_allocated,
+            "preemptions": s_c.preemptions,
+            "wall_seconds": round(s_c.wall_seconds, 3),
+        },
+        "token_at_a_time": {
+            "gen_tokens_per_second": round(tps_t, 1),
+            "generated_tokens": gen_t,
+            "steps": s_t.steps,
+            "mean_ttft_steps": round(s_t.mean_ttft_steps, 1),
+            "mean_ttft_seconds": round(s_t.mean_ttft_seconds, 4),
+            "pages_allocated": s_t.pages_allocated,
+            "preemptions": s_t.preemptions,
+            "wall_seconds": round(s_t.wall_seconds, 3),
+        },
+        "speedup": round(speedup, 2),
+        "ttft_dispatch_ratio": round(ttft_ratio, 3),
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+
+    return [
+        {"bench": "prefill_throughput", "method": "chunked",
+         "gen_tokens_per_second": round(tps_c, 1), "steps": s_c.steps,
+         "mean_ttft_steps": round(s_c.mean_ttft_steps, 1),
+         "chunked_steps": s_c.chunked_steps},
+        {"bench": "prefill_throughput", "method": "token_at_a_time",
+         "gen_tokens_per_second": round(tps_t, 1), "steps": s_t.steps,
+         "mean_ttft_steps": round(s_t.mean_ttft_steps, 1)},
+        {"bench": "prefill_throughput", "method": "speedup",
+         "speedup_x": round(speedup, 2),
+         "ttft_dispatch_ratio": round(ttft_ratio, 3)},
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

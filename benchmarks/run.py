@@ -56,6 +56,23 @@ def _checks(all_rows) -> bool:
               f"(got {x}x),{'PASS' if passed else 'FAIL'}")
         ok &= passed
 
+    # chunked-prefill gates (BENCH_prefill.json): one dispatch must cover C
+    # prompt tokens — structurally fewer dispatches to the first token AND
+    # an end-to-end throughput win on the long-prompt workload
+    pf = [r for r in all_rows
+          if r["bench"] == "prefill_throughput" and r["method"] == "speedup"]
+    if pf:
+        x, tr = pf[0]["speedup_x"], pf[0]["ttft_dispatch_ratio"]
+        passed = tr <= 0.25
+        print(f"check,prefill_throughput: chunked TTFT <= 1/4 the dispatches "
+              f"of token-at-a-time (got ratio {tr}),"
+              f"{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+        passed = x >= 1.5
+        print(f"check,prefill_throughput: chunked prefill >=1.5x gen "
+              f"tokens/sec (got {x}x),{'PASS' if passed else 'FAIL'}")
+        ok &= passed
+
     # prefix-sharing gates (BENCH_prefix.json): the refcounted cache must
     # pay for itself on the shared-system-prompt workload
     pc = [r for r in all_rows
@@ -121,7 +138,8 @@ def main() -> None:
     quick = not args.paper_scale
 
     from . import (decode_throughput, hash_table, linked_list, memory_release,
-                   memory_release_device, paged_attention_bench, prefix_cache)
+                   memory_release_device, paged_attention_bench, prefix_cache,
+                   prefill_throughput)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -131,12 +149,14 @@ def main() -> None:
         (paged_attention_bench, "device_paged_attention"),
         (decode_throughput, "decode_throughput"),
         (prefix_cache, "prefix_cache_sharing"),
+        (prefill_throughput, "chunked_prefill"),
     ]
     if args.check:  # the BENCH-gated subset only
         suite = [
             (memory_release_device, "fig3_device_memory_release"),
             (decode_throughput, "decode_throughput"),
             (prefix_cache, "prefix_cache_sharing"),
+            (prefill_throughput, "chunked_prefill"),
         ]
 
     all_rows = []

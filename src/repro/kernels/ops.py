@@ -10,29 +10,46 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .paged_attention import paged_attention_pallas
-from .ref import paged_attention_ref
+from .ref import paged_attention_chunked_ref, paged_attention_ref
 
 
 def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
-                    pages_per_compute_block: int = 1):
-    """Decode attention over the paged pool.
+                    pages_per_compute_block: int = 1, chunk_lens=None):
+    """Decode or chunked-prefill attention over the paged pool.
 
-    q [B, Hq, D]; kv {'k','v': [P, page, Hkv, D]}; block_tables [B, max_pages];
-    lengths [B].  Returns [B, Hq, D].
+    q [B, Hq, D] (decode: one query per row) or [B, C, Hq, D] (chunk: C
+    queries per row with in-chunk causal masking); kv {'k','v': [P, page,
+    Hkv, D]}; block_tables [B, max_pages]; lengths [B] — the TOTAL valid KV
+    length per row including any tokens the chunk just appended.
+    ``chunk_lens`` [B] int32 is each row's live query count (rows finishing
+    mid-chunk, decode rows in a mixed batch); None means every query slot is
+    live.  Returns the same rank as q.
 
     ``pages_per_compute_block`` tiles the Pallas grid: each grid step fetches
     that many KV pages and runs one set of MXU dots over the combined
     (ppcb*page_size, Hkv*D) tile (ignored by the jnp reference).
     """
+    if q.ndim == 3:
+        # decode form: one query per row, classic ``pos < lengths`` mask —
+        # chunk_lens is meaningless here and is dropped in EVERY impl so
+        # ref/interpret/pallas can never silently disagree
+        chunk_lens = None
     if impl == "ref":
-        return paged_attention_ref(q, kv["k"], kv["v"], block_tables, lengths)
+        if q.ndim == 3:
+            return paged_attention_ref(q, kv["k"], kv["v"], block_tables,
+                                       lengths)
+        if chunk_lens is None:
+            chunk_lens = jnp.full((q.shape[0],), q.shape[1], jnp.int32)
+        return paged_attention_chunked_ref(q, kv["k"], kv["v"], block_tables,
+                                           lengths, chunk_lens)
     page_size = kv["k"].shape[1]
     n_kv_heads = kv["k"].shape[2]
     return paged_attention_pallas(
         q, kv["k"], kv["v"], block_tables, lengths,
         page_size=page_size, n_kv_heads=n_kv_heads,
         pages_per_compute_block=pages_per_compute_block,
-        interpret=(impl == "interpret"),
+        interpret=(impl == "interpret"), chunk_lens=chunk_lens,
     )

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: decode attention over the versioned page pool.
+"""Pallas TPU kernel: decode + chunked-prefill attention over the versioned
+page pool.
 
 This is the compute hot-spot of the paper's device-side adaptation: the
 optimistic reader.  It walks a sequence's block table in compute blocks of
@@ -8,6 +9,13 @@ the jnp reference path instead materializes the gathered [S, Hkv, D] cache
 in HBM (2× traffic on the dominant term of the decode roofline; see
 EXPERIMENTS.md §Perf).
 
+The query side carries a **chunk axis**: q is [B, C, Hq, D] where C is the
+chunk size (C = 1 is the decode special case — the [B, Hq, D] form is
+accepted and squeezed back on return).  A chunked-prefill step appends C
+prompt tokens and attends them all in ONE kernel launch; the paper's
+amortize-the-validation argument applied along the sequence axis (one
+dispatch, one OA validation for C tokens instead of C of each).
+
 TPU mapping:
 - grid = (batch, ceil(max_pages / pages_per_compute_block)); the block table
   rides in scalar-prefetch memory (SMEM) so the ``index_map`` can translate
@@ -16,9 +24,16 @@ TPU mapping:
 - Each grid step assembles a (ppcb*page_size, Hkv*D) KV tile from ``ppcb``
   independently-mapped pages (one BlockSpec per page within the block — the
   pages are scattered in the arena, so each needs its own translation), then
-  issues ONE set of MXU dots over the whole tile.  Larger ``ppcb`` ⇒ fewer
-  grid steps, fewer accumulator round-trips, larger dots — the same
-  batching-of-validation amortization OA applies to reclamation.
+  issues ONE set of MXU dots for all C queries over the whole tile.  Larger
+  ``ppcb`` ⇒ fewer grid steps, fewer accumulator round-trips, larger dots —
+  the same batching-of-validation amortization OA applies to reclamation.
+- **In-chunk causal mask**: ``lengths[b]`` is the row's TOTAL valid KV
+  length including this step's appended chunk; ``chunk_lens[b]`` (1..C) is
+  how many of the C query slots are live.  Query j sits at global position
+  ``lengths - chunk_lens + j`` and sees ``pos < lengths - chunk_lens + j +
+  1``; padded slots (j >= chunk_lens — rows finishing mid-chunk, decode
+  rows inside a mixed batch) fall back to the full ``pos < lengths`` view,
+  staying finite while their output is discarded.
 - ``pl.when`` skips the COMPUTE (dots, softmax accumulation, scratch
   round-trips) for blocks that are entirely past ``lengths[b]`` or fully
   unmapped (every table entry < 0).  Note the BlockSpec DMAs are still
@@ -29,11 +44,13 @@ TPU mapping:
   entry fetches garbage *safely*; the scheduler's version check discards the
   result (OA semantics — reads validated after the fact).
 - Block shapes: page_size and Hkv*D should be multiples of (8, 128) for
-  MXU/VREG alignment; q is (Hkv*G, D) = (Hq, D).
+  MXU/VREG alignment; q is (C, Hkv*G, D) = (C, Hq, D).
 
 Weak spots the sweep tests cover: GQA grouping, ragged lengths mid-page,
 unmapped (-1) table entries, page_size not dividing length, max_pages not
-divisible by pages_per_compute_block (padded with -1 slots).
+divisible by pages_per_compute_block (padded with -1 slots), chunks
+straddling page boundaries, and rows finishing mid-chunk
+(chunk_lens < C).
 """
 
 from __future__ import annotations
@@ -49,9 +66,10 @@ from jax.experimental.pallas import tpu as pltpu
 def _kernel(
     # scalar-prefetch
     block_tables_ref,  # [B, nblocks*ppcb] (SMEM)
-    lengths_ref,  # [B] (SMEM)
+    lengths_ref,  # [B] (SMEM) — total valid length incl. the chunk
+    chunk_lens_ref,  # [B] (SMEM) — live query slots (1..C)
     # blocked inputs: q, then ppcb k-page refs, then ppcb v-page refs
-    q_ref,  # [1, Hq, D]
+    q_ref,  # [1, C, Hq, D]
     *refs,
     page_size: int,
     n_kv_heads: int,
@@ -59,13 +77,14 @@ def _kernel(
 ):
     k_refs = refs[:ppcb]  # each [1, page, Hkv, D]
     v_refs = refs[ppcb : 2 * ppcb]
-    o_ref = refs[2 * ppcb]  # [1, Hq, D]
-    m_ref, l_ref, acc_ref = refs[2 * ppcb + 1 :]  # VMEM scratch
+    o_ref = refs[2 * ppcb]  # [1, C, Hq, D]
+    m_ref, l_ref, acc_ref = refs[2 * ppcb + 1 :]  # VMEM scratch, C axis first
 
     b = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1)
     span = ppcb * page_size
+    C = q_ref.shape[1]
 
     @pl.when(i == 0)
     def _init():
@@ -83,43 +102,50 @@ def _kernel(
 
     @pl.when(block_live)
     def _compute():
-        q = q_ref[0]  # [Hq, D]
+        q = q_ref[0]  # [C, Hq, D]
         k = jnp.concatenate([r[0] for r in k_refs], axis=0)  # [span, Hkv, D]
         v = jnp.concatenate([r[0] for r in v_refs], axis=0)
-        Hq, D = q.shape
+        Hq, D = q.shape[1], q.shape[2]
         G = Hq // n_kv_heads
-        qg = q.reshape(n_kv_heads, G, D).astype(jnp.float32)
-        # [Hkv, G, span] — one MXU dot per kv head over the whole block
-        s = jnp.einsum("hgd,phd->hgp", qg, k.astype(jnp.float32))
+        qg = q.reshape(C, n_kv_heads, G, D).astype(jnp.float32)
+        # [C, Hkv, G, span] — one MXU dot per kv head for all C queries
+        s = jnp.einsum("chgd,phd->chgp", qg, k.astype(jnp.float32))
         s = s * (1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)))
 
         pos = start + jax.lax.iota(jnp.int32, span)
-        live = (pos < lengths_ref[b]) & jnp.repeat(mapped, page_size)
-        s = jnp.where(live[None, None, :], s, -jnp.inf)
+        # in-chunk causal horizon: query j (global position
+        # lengths - chunk_lens + j) sees pos < that position + 1; padded
+        # slots (j >= chunk_lens) clamp to the full pos < lengths view
+        qpos = lengths_ref[b] - chunk_lens_ref[b] + jax.lax.iota(jnp.int32, C)
+        limit = jnp.minimum(qpos + 1, lengths_ref[b])
+        live = (pos[None, :] < limit[:, None]) & \
+            jnp.repeat(mapped, page_size)[None, :]  # [C, span]
+        s = jnp.where(live[:, None, None, :], s, -jnp.inf)
 
-        m_prev = m_ref[...].reshape(n_kv_heads, G)
-        l_prev = l_ref[...].reshape(n_kv_heads, G)
-        acc_prev = acc_ref[...].reshape(n_kv_heads, G, D)
+        m_prev = m_ref[...].reshape(C, n_kv_heads, G)
+        l_prev = l_ref[...].reshape(C, n_kv_heads, G)
+        acc_prev = acc_ref[...].reshape(C, n_kv_heads, G, D)
 
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-        p = jnp.where(live[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        p = jnp.where(live[:, None, None, :],
+                      jnp.exp(s - m_safe[..., None]), 0.0)
         alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
         l_new = l_prev * alpha + jnp.sum(p, axis=-1)
-        pv = jnp.einsum("hgp,phd->hgd", p, v.astype(jnp.float32))
+        pv = jnp.einsum("chgp,phd->chgd", p, v.astype(jnp.float32))
         acc_new = acc_prev * alpha[..., None] + pv
 
-        m_ref[...] = m_new.reshape(Hq)
-        l_ref[...] = l_new.reshape(Hq)
-        acc_ref[...] = acc_new.reshape(Hq, D)
+        m_ref[...] = m_new.reshape(C, Hq)
+        l_ref[...] = l_new.reshape(C, Hq)
+        acc_ref[...] = acc_new.reshape(C, Hq, D)
 
     @pl.when(i == nb - 1)
     def _finish():
-        Hq, D = o_ref.shape[1], o_ref.shape[2]
+        Hq, D = o_ref.shape[2], o_ref.shape[3]
         G = Hq // n_kv_heads
-        l = jnp.maximum(l_ref[...].reshape(n_kv_heads, G), 1e-30)
-        out = acc_ref[...].reshape(n_kv_heads, G, D) / l[..., None]
-        o_ref[0] = out.reshape(Hq, D).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...].reshape(C, n_kv_heads, G), 1e-30)
+        out = acc_ref[...].reshape(C, n_kv_heads, G, D) / l[..., None]
+        o_ref[0] = out.reshape(C, Hq, D).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -130,9 +156,21 @@ def _kernel(
 def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
                            page_size: int, n_kv_heads: int,
                            pages_per_compute_block: int = 1,
-                           interpret: bool = True):
-    """q [B, Hq, D] -> [B, Hq, D].  See module docstring for layout rules."""
-    B, Hq, D = q.shape
+                           interpret: bool = True, chunk_lens=None):
+    """q [B, Hq, D] (decode) or [B, C, Hq, D] (chunk) -> same shape back.
+
+    ``lengths`` is the total valid KV length per row (including the chunk's
+    appended tokens); ``chunk_lens`` [B] int32 gives each row's live query
+    count for the in-chunk causal mask (None = every slot live — for the
+    decode form that is the classic single-query mask).  See the module
+    docstring for layout rules.
+    """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C, Hq, D = q.shape
+    if chunk_lens is None:
+        chunk_lens = jnp.full((B,), C, jnp.int32)
     ppcb = max(int(pages_per_compute_block), 1)
     max_pages = block_tables.shape[1]
     nblocks = -(-max_pages // ppcb)
@@ -144,32 +182,34 @@ def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
     def page_map(j):
         # each of the block's ppcb pages gets its own virtual→physical
         # translation (they are scattered in the arena)
-        def m(b, i, bt, ln):
+        def m(b, i, bt, ln, cl):
             return (jnp.maximum(bt[b, i * ppcb + j], 0), 0, 0, 0)
         return m
 
     kv_spec = lambda j: pl.BlockSpec((1, page_size, n_kv_heads, D), page_map(j))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, nblocks),
         in_specs=(
-            [pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0))]
+            [pl.BlockSpec((1, C, Hq, D), lambda b, i, bt, ln, cl: (b, 0, 0, 0))]
             + [kv_spec(j) for j in range(ppcb)]
             + [kv_spec(j) for j in range(ppcb)]
         ),
-        out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, bt, ln: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, C, Hq, D),
+                               lambda b, i, bt, ln, cl: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((Hq,), jnp.float32),
-            pltpu.VMEM((Hq,), jnp.float32),
-            pltpu.VMEM((Hq, D), jnp.float32),
+            pltpu.VMEM((C, Hq), jnp.float32),
+            pltpu.VMEM((C, Hq), jnp.float32),
+            pltpu.VMEM((C, Hq, D), jnp.float32),
         ],
     )
     kern = functools.partial(_kernel, page_size=page_size,
                              n_kv_heads=n_kv_heads, ppcb=ppcb)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, C, Hq, D), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, q,
+    )(block_tables, lengths, chunk_lens, q,
       *([k_pages] * ppcb), *([v_pages] * ppcb))
+    return out[:, 0] if squeeze else out

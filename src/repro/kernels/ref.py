@@ -3,7 +3,13 @@
 ``paged_attention_ref`` is the reference semantics for decode attention over
 the versioned page pool: gather pages through the block table (reads through
 freed pages are safe — the arena is persistent), mask to the live length,
-online softmax.  The Pallas kernel must match this bit-for-bit in fp32.
+online softmax.  ``paged_attention_chunked_ref`` generalizes it along the
+sequence axis for chunked prefill: a chunk of C query tokens attends the
+same paged KV with an in-chunk causal mask (query j of a row whose chunk
+holds ``chunk_lens`` live tokens sees key positions
+``< min(lengths - chunk_lens + j + 1, lengths)``), so one call covers C
+prompt tokens where decode needed C dispatches.  The Pallas kernel must
+match these bit-for-bit in fp32.
 """
 
 from __future__ import annotations
@@ -35,3 +41,48 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
         return o.reshape(Hq, D)
 
     return jax.vmap(one)(q, block_tables, lengths).astype(q.dtype)
+
+
+def paged_attention_chunked_ref(q, k_pages, v_pages, block_tables, lengths,
+                                chunk_lens):
+    """Chunked-prefill oracle: C query tokens per row in one pass.
+
+    q [B, C, Hq, D]; k_pages/v_pages [P, page, Hkv, D]; block_tables
+    [B, max_pages] int32 (−1 = unmapped); lengths [B] int32 is the TOTAL
+    valid KV length per row *including* the chunk's freshly appended tokens;
+    chunk_lens [B] int32 (1..C) is how many of the C query slots are live.
+    Query j sits at global position ``lengths - chunk_lens + j``, so its
+    causal horizon is ``pos < lengths - chunk_lens + j + 1``; padded query
+    slots (j >= chunk_lens) fall back to the full ``pos < lengths`` view —
+    their output is finite but unused (the fused step samples only from
+    slot ``chunk_lens - 1``).  Returns [B, C, Hq, D] (q.dtype).
+
+    Fully-masked queries (e.g. lengths == 0 rows) return zeros rather than
+    NaN: the softmax is the guarded online form the Pallas kernel uses.
+    """
+    B, C, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    def one(qb, bt, ln, cn):
+        pages = jnp.maximum(bt, 0)
+        k = k_pages[pages].reshape(max_pages * page, Hkv, D)
+        v = v_pages[pages].reshape(max_pages * page, Hkv, D)
+        qg = qb.reshape(C, Hkv, G, D).astype(jnp.float32)
+        s = jnp.einsum("chgd,shd->chgs", qg, k.astype(jnp.float32)) * scale
+        pos = jnp.arange(max_pages * page)
+        qpos = ln - cn + jnp.arange(C)  # global position of query j
+        limit = jnp.minimum(qpos + 1, ln)  # in-chunk causal horizon
+        mask = (pos[None, :] < limit[:, None]) & (bt[pos // page] >= 0)[None, :]
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(mask[:, None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        l = jnp.maximum(jnp.sum(p, axis=-1), 1e-30)
+        o = jnp.einsum("chgs,shd->chgd", p / l[..., None],
+                       v.astype(jnp.float32))
+        return o.reshape(C, Hq, D)
+
+    return jax.vmap(one)(q, block_tables, lengths, chunk_lens).astype(q.dtype)

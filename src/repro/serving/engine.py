@@ -36,13 +36,26 @@ The OA story end-to-end (DESIGN.md §2):
 
 Hot-path contract (the point of this engine): block tables, lengths, the
 prompt buffer, the OA snapshot and the free pool are persistent DEVICE
-arrays updated functionally by ``fused_decode_step``; a steady-state decode
-step performs exactly ONE host transfer ([B] tokens + [B] valid + [B]
-grant-info in a single ``device_get``) and zero host→device uploads.  The
+arrays updated functionally by ``fused_decode_step``; a steady-state step
+performs exactly ONE host transfer ([B] tokens + [B] valid + [B] grant-info
++ [B] cow + [B] advanced-token counts in a single ``device_get``).  The
 Python scheduler touches host state only on admission, preemption,
 completion and explicit pool maintenance (shrink/remap) — the same
 amortization the paper applies to reclamation (validate once per batch, not
 once per page).
+
+**Chunked prefill** (``prefill_chunk=C > 1``) extends the same contract to
+prompt replay: rows still prefilling consume up to C prompt tokens per
+dispatch (one multi-page grant, one KV append, one chunked attention pass,
+one OA validation for the whole chunk) while decoding rows take their
+single token in the SAME step — the mixed batch.  The scheduler holds a
+Sarathi-style ``token_budget`` across the batch: decoding rows reserve one
+token each and the remainder is split across prefilling rows via a traced
+scalar, so the chunk size adapts per step without recompiling.  Pure-decode
+steps dispatch the classic C=1 executable — steady-state decode pays
+nothing for the feature.  Prefix-cache misses prefill in chunks too; the
+COW/refcount semantics are unchanged (a chunk's first written page may be
+shared — it is diverged in the same fused grant).
 
 Release / remap knobs (all host-side; the hot path never syncs for them):
 
@@ -62,6 +75,10 @@ Release / remap knobs (all host-side; the hot path never syncs for them):
   Under pressure the cache is evicted BEFORE any running request is
   preempted; eviction is the same optimistic reclamation as everything
   else (``unshare_pages``: version bump on the zero-transition).
+- ``prefill_chunk`` / ``token_budget``: chunked prefill (see above) and the
+  Sarathi-style per-step token cap; a starved multi-page grant halves an
+  AIMD budget cap toward token-at-a-time, clean chunked steps double it
+  back.
 
 Counters mirror the paper's: warnings fired (pool clock), reader restarts,
 preemptions, reclaimed pages, superblocks released/remapped, mapped pages —
@@ -95,6 +112,11 @@ class Request:
     committed: int = 0  # tokens (prompt+generated) whose KV is committed
     restarts: int = 0
     state: str = "queued"  # queued | running | finished
+    # time-to-first-token accounting (chunked prefill's headline metric)
+    submitted_at: float = 0.0  # wall clock at submit()
+    admitted_step: int | None = None  # engine step count at FIRST admission
+    first_token_at: float | None = None  # wall clock at first generated token
+    first_token_step: int | None = None  # engine step that produced it
     slot: int | None = None  # batch row while running
     pages_held: int = 0  # host-side page COUNT (ids live on device)
     externally_reclaimed: bool = False  # a reclaimer raced us and owns the pages
@@ -111,6 +133,25 @@ class Request:
     def target_len(self) -> int:
         """Final sequence length (prompt + full generation budget)."""
         return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def ttft_seconds(self) -> float | None:
+        """Submit → first generated token wall time (None until it lands)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def ttft_steps(self) -> int | None:
+        """Engine dispatches between FIRST admission and the first generated
+        token (inclusive) — the structural TTFT chunked prefill shrinks: a
+        P-token prompt takes ~ceil(P/C) dispatches instead of P.  Like
+        ``ttft_seconds``, a preemption restart does NOT reset the clock:
+        the dispatches a restart replays are part of the latency the user
+        saw."""
+        if self.first_token_step is None or self.admitted_step is None:
+            return None
+        return self.first_token_step - self.admitted_step
 
     @property
     def pages(self) -> list[int]:
@@ -159,6 +200,12 @@ class EngineStats:
     cow_copies: int = 0  # divergent writes resolved by a fused page copy
     prefix_cache_pages: int = 0  # pages currently pinned by the donation index
     prefix_evictions: int = 0  # cache entries evicted (pressure or cap)
+    # chunked-prefill / TTFT accounting (per-request detail on Request)
+    ttft_requests: int = 0  # requests that produced a first token
+    mean_ttft_steps: float = 0.0  # mean dispatches admission -> first token
+    mean_ttft_seconds: float = 0.0  # mean submit -> first token wall time
+    chunked_steps: int = 0  # steps dispatched with a chunk axis (C > 1)
+    prefill_tokens_chunked: int = 0  # prompt tokens committed by those steps
 
 
 # -- jitted slot transitions (admission / release; no host syncs) -----------
@@ -222,7 +269,9 @@ class PagedServingEngine:
                  release_quiescence: int | None = None,
                  min_mapped_superblocks: int = 1,
                  prefix_cache: bool = False,
-                 prefix_cache_pages: int | None = None):
+                 prefix_cache_pages: int | None = None,
+                 prefill_chunk: int = 1,
+                 token_budget: int | None = None):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -230,6 +279,23 @@ class PagedServingEngine:
         self.max_batch = max_batch
         self.attn_impl = attn_impl
         self.pages_per_compute_block = pages_per_compute_block
+        # chunked prefill: prompts replay up to ``prefill_chunk`` tokens per
+        # dispatch (1 = token-at-a-time).  ``token_budget`` caps the TOTAL
+        # tokens a mixed step may process (Sarathi-style): decoding rows
+        # reserve 1 each, the remainder is split across prefilling rows —
+        # realized on device through the traced ``chunk_budget`` scalar, so
+        # the budget adapts per step without recompiling.
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.token_budget = token_budget
+        # AIMD backoff of the chunk budget under memory pressure: a starved
+        # multi-page chunk grant halves the cap (floor 1 — token-at-a-time,
+        # whose one-page-per-row-per-step demand the preemption machinery is
+        # proven against), a starvation-free chunked step doubles it back.
+        self._chunk_budget_cap = self.prefill_chunk
+        # resident device scalar for the C=1 executable, where the budget is
+        # clipped to 1 anyway: pure-decode steps must not pay a per-step
+        # host->device upload for a value that cannot matter
+        self._budget_one = jnp.asarray(1, jnp.int32)
         self.pool = pp.pool_init(num_pages, pages_per_superblock)
         self.pages_per_superblock = self.pool.pages_per_superblock
         self.release_strategy = release_strategy
@@ -247,6 +313,8 @@ class PagedServingEngine:
         self._next_rid = itertools.count(1000)
         self._warning_batches = 0  # host mirror of pool.clock (no sync)
         self._idle_ticks = 0  # consecutive maintenance ticks with no pressure
+        self._ttft_steps_total = 0  # running sums behind the EngineStats means
+        self._ttft_seconds_total = 0.0
 
         # prefix-sharing host mirrors.  The index maps an exact token tuple
         # (length a multiple of page_size) to the device page holding that
@@ -653,11 +721,51 @@ class PagedServingEngine:
     # -- scheduling -------------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
-        """Queue a request (host-only; no device work until admission)."""
-        req = Request(rid=next(self._next_rid), prompt=list(prompt),
-                      max_new_tokens=max_new_tokens, _engine=self)
+        """Queue a request (host-only; no device work until admission).
+
+        Over-long requests are REJECTED here with a clear error instead of
+        being silently clamped downstream: a prompt whose replay positions
+        exceed the slot's KV capacity would otherwise hit the fused step's
+        defensive position clamp and generate garbage from the wrong
+        tokens.  (``MemoryError`` for pool-wide exhaustion still comes from
+        admission — this guard is per-slot capacity, knowable at submit.)
+        """
+        prompt = list(prompt)
+        cap_tokens = self.max_pages_per_seq * self.page_size
+        if len(prompt) + max_new_tokens > cap_tokens:
+            raise ValueError(
+                f"request needs {len(prompt)} prompt + {max_new_tokens} "
+                f"generated tokens but a slot holds at most {cap_tokens} "
+                f"(max_pages_per_seq={self.max_pages_per_seq} × "
+                f"page_size={self.page_size}); split the prompt or raise "
+                f"max_pages_per_seq")
+        req = Request(rid=next(self._next_rid), prompt=prompt,
+                      max_new_tokens=max_new_tokens, _engine=self,
+                      submitted_at=time.time())
         self.queue.append(req)
         return req
+
+    def _pages_needed_next_step(self, r: Request) -> int:
+        """Pages ``r``'s NEXT step will demand from the pool (host mirrors
+        only — no device sync).  A decoding row needs at most one (its write
+        position crossing into an unmapped page); a prefilling row's chunk
+        may straddle several page boundaries; a row whose write position
+        still sits in a shared page needs one more for the COW copy."""
+        ps = self.page_size
+        # the next dispatch's budget is capped by the LIVE AIMD cap (it only
+        # moves inside step()), so charging the configured prefill_chunk
+        # here would over-reserve after a backoff — needlessly evicting
+        # cache pages or refusing admissions the real demand allows
+        chunk = max(1, min(self.prefill_chunk, self._chunk_budget_cap))
+        if r.committed < len(r.prompt) and chunk > 1:
+            n_next = min(chunk, len(r.prompt) - r.committed)
+        else:
+            n_next = 1
+        last_pi = (r.committed + n_next - 1) // ps
+        need = max(0, last_pi + 1 - r.pages_held)
+        if (r.committed // ps) in r.shared_chain:
+            need += 1  # COW copy of the still-shared write page
+        return need
 
     def _ensure_prompt_cap(self, n: int) -> None:
         if n <= self._prompt_cap:
@@ -705,7 +813,7 @@ class PagedServingEngine:
             need_fresh = (m % ps == 0)  # first write lands on a new page
             pages = jnp.full((1,), -1, jnp.int32)
             # Starvation guard — for EVERY admission: running rows that need
-            # a page THIS step have first claim on the free pool.  Without
+            # pages THIS step have first claim on the free pool.  Without
             # this, admission can keep stealing the page a preemption just
             # freed for a starved row — an admit/starve/preempt livelock.
             # (Host-side arithmetic only: the mirrors track the device
@@ -714,16 +822,31 @@ class PagedServingEngine:
             # needing a page, their next step allocates the copy.  A
             # tail-match admission allocates nothing NOW but its first step
             # demands a COW copy, so it reserves one page exactly like a
-            # fresh-page admission does.
+            # fresh-page admission does.  A prefilling row consuming a
+            # C-token chunk can demand several pages in one step (the chunk
+            # straddles page boundaries) — `_pages_needed_next_step` counts
+            # them all, so chunked prefill can't sneak past the guard.
             used = self._distinct_pages_in_use()
-            need_now = sum(
-                1 for r in self.running
-                if (r.committed // ps) >= r.pages_held
-                or (r.committed // ps) in r.shared_chain)
-            short = 1 + used + need_now - self._mapped_pages
+            need_now = sum(self._pages_needed_next_step(r)
+                           for r in self.running)
+            # what THIS admission must reserve: the fresh page granted now
+            # plus every page the request's FIRST step will demand — with
+            # chunked prefill that first step spans up to ceil(C/page_size)
+            # pages (plus a COW copy for a tail match), so reserving just 1
+            # would let admission starve a running row on its very next
+            # grant.  Reduces to the old "reserve 1" for prefill_chunk=1.
+            n_first = min(max(1, min(self.prefill_chunk,
+                                     self._chunk_budget_cap)),
+                          len(req.prompt) - m)
+            held_after = len(shared) + (1 if need_fresh else 0)
+            first_need = max(0, (m + n_first - 1) // ps + 1 - held_after)
+            if tail_page >= 0:
+                first_need += 1  # the first step COWs the shared tail page
+            reserve = (1 if need_fresh else 0) + first_need
+            short = reserve + used + need_now - self._mapped_pages
             if short > 0:
                 self._remap_for(short)
-                short = (1 + self._distinct_pages_in_use() + need_now
+                short = (reserve + self._distinct_pages_in_use() + need_now
                          - self._mapped_pages)
                 if short > 0 and self.prefix_cache:
                     # cache-only pages cost no running request anything:
@@ -731,8 +854,8 @@ class PagedServingEngine:
                     # entirely by the index must drain via eviction, not
                     # dead-end into "exhausted with empty running set")
                     self._evict_prefix(short)
-                    short = (1 + self._distinct_pages_in_use() + need_now
-                             - self._mapped_pages)
+                    short = (reserve + self._distinct_pages_in_use()
+                             + need_now - self._mapped_pages)
                 if short > 0:
                     self._unshare_admission(req, shared)
                     break  # remap + eviction fell short: a partial cover
@@ -772,6 +895,8 @@ class PagedServingEngine:
             self.queue.popleft()
             req.state = "running"
             req.slot = slot
+            if req.admitted_step is None:  # restarts keep the original clock
+                req.admitted_step = self.stats.steps
             req.committed = m
             req.prefix_reused = m
             req.shared_chain = dict(enumerate(shared))
@@ -798,24 +923,43 @@ class PagedServingEngine:
             self._dec_sharer(p)
 
     def _pick_victim_and_preempt(self, starved: list[Request]) -> bool:
-        """Evict to unblock ``starved`` rows: prefer the youngest NON-starved
-        request (evicting a starved row would restart the work we are trying
-        to unblock); if every running row is starved, evict the youngest of
-        those — it both frees pages and withdraws its own demand.  Remap is
-        tried first (released superblocks cover starvation without costing
-        any running request its work), then prefix-cache eviction (cached
-        pages cost no request anything either), then preemption."""
+        """Evict to unblock ``starved`` rows: the victim is the YOUNGEST
+        running request overall (least committed work lost).  Preempting a
+        young non-starved row frees pages for the starved; preempting a
+        young starved row withdraws its own demand — either way the MOST
+        committed row is never the victim, so the batch's leader always
+        makes progress and preemption cannot ping-pong (with chunked
+        prefill a young row can demand several pages per step, which made
+        the old prefer-non-starved policy evict an almost-finished leader
+        over and over).  Remap is tried first (released superblocks cover
+        starvation without costing any running request its work), then
+        prefix-cache eviction (cached pages cost no request anything
+        either), then preemption."""
         if self._remap_for(len(starved)):
             return True
         if self.prefix_cache and self._evict_prefix(len(starved)) > 0:
             return True
-        cands = [r for r in self.running if r not in starved] or self.running
-        if not cands:
+        if not self.running:
             return False
-        self._preempt(min(cands, key=lambda r: r.committed))
+        self._preempt(min(self.running, key=lambda r: r.committed))
         return True
 
     # -- the decode loop ----------------------------------------------------------
+
+    def _record_ttft(self, req: Request) -> None:
+        """First generated token landed: freeze the request's TTFT and fold
+        it into the EngineStats means (host arithmetic only).  A restarted
+        request keeps its original submit time — restarts are part of the
+        latency the user saw."""
+        req.first_token_at = time.time()
+        req.first_token_step = self.stats.steps + 1  # steps increments at end
+        self._ttft_steps_total += req.ttft_steps
+        self._ttft_seconds_total += req.ttft_seconds
+        self.stats.ttft_requests += 1
+        self.stats.mean_ttft_steps = (
+            self._ttft_steps_total / self.stats.ttft_requests)
+        self.stats.mean_ttft_seconds = (
+            self._ttft_seconds_total / self.stats.ttft_requests)
 
     def inject_external_reclaim(self, req: Request) -> None:
         """TEST/RACE HOOK — simulate a reclaimer racing the decode loop: the
@@ -850,36 +994,66 @@ class PagedServingEngine:
         key = (self._base_key if self.greedy
                else jax.random.fold_in(self._base_key, self._step_idx))
 
+        # chunk sizing (host mirrors only — committed/prompt lengths are
+        # host state, so picking the executable costs no device sync).  The
+        # C=1 variant is the classic decode step; the C=prefill_chunk
+        # variant runs whenever any row is still replaying its prompt —
+        # decoding rows ride along with n_new=1 (the mixed batch).  The
+        # Sarathi-style token budget reserves one token per decoding row
+        # and splits the rest across prefilling rows, realized through the
+        # TRACED chunk_budget scalar so no recompile happens per step.
+        n_prefill = sum(1 for r in self.running
+                        if r.committed < len(r.prompt))
+        if n_prefill and self.prefill_chunk > 1:
+            C = self.prefill_chunk
+            if self.token_budget is None:
+                budget = C
+            else:
+                n_decode = len(self.running) - n_prefill
+                budget = max(1, min(
+                    C, (self.token_budget - n_decode) // n_prefill))
+            budget = max(1, min(budget, self._chunk_budget_cap))
+        else:
+            C, budget = 1, 1
+
         (self.kv, self.pool, self._bt, self._snap, self._len, self._last,
-         nxt, valid, grant_info) = fused_decode_step(
+         nxt, valid, grant_info, cow, adv) = fused_decode_step(
             self.params, self.kv, self.pool, self._bt, self._snap,
             self._len, self._last, self._active, self._pbuf, self._plen,
-            key, self._temperature, cfg=self.cfg, impl=self.attn_impl,
-            greedy=self.greedy,
-            pages_per_compute_block=self.pages_per_compute_block)
+            key, self._temperature,
+            (self._budget_one if C == 1 else jnp.asarray(budget, jnp.int32)),
+            cfg=self.cfg, impl=self.attn_impl, greedy=self.greedy,
+            pages_per_compute_block=self.pages_per_compute_block,
+            chunk_size=C)
 
         # THE one host transfer of the steady-state step
-        tok_np, valid_np, grant_np = jax.device_get((nxt, valid, grant_info))
+        tok_np, valid_np, grant_np, cow_np, adv_np = jax.device_get(
+            (nxt, valid, grant_info, cow, adv))
 
         # host mirror of the device-side page grants (before any preemption
-        # can reset a row's counters).  grant_info codes (paged_decode):
-        # 0 = none needed, 1 = fresh page, 2 = COW copy, -1 = starved.
+        # can reset a row's counters).  grant_info (paged_decode): number of
+        # fresh pages granted (a chunk can straddle several), −1 = starved
+        # (all-or-nothing: the row got no pages); cow flags a COW copy
+        # among them.
         cow_freed = False  # all COW decrefs land in ONE device unshare
         # batch, so the device clock ticks AT MOST ONCE per step no matter
         # how many pages hit zero — the mirror must follow the same rule
         for req in self.running:
             gi = int(grant_np[req.slot])
-            if gi == 1:
-                req.pages_held += 1  # grant landed (even if the row restarts)
-                self.stats.pages_allocated += 1
-            elif gi == 2:
+            if gi <= 0:
+                continue  # nothing granted (0 = none needed, −1 = starved)
+            # grants landed (even if the row's validation fails this step)
+            self.stats.pages_allocated += gi
+            req.pages_held += gi
+            if cow_np[req.slot]:
                 # COW divergence: the fused step copied the shared page the
                 # row was about to write, repointed the block table at the
                 # copy and dropped the row's reference on the original.
-                # pages_held is unchanged (replaced in place); the share
-                # mirror shrinks — and if this row was the last sharer of an
-                # evicted page, the device freed it and ticked the clock.
-                self.stats.pages_allocated += 1
+                # That grant REPLACED a page (net footprint unchanged); the
+                # share mirror shrinks — and if this row was the last
+                # sharer of an evicted page, the device freed it and ticked
+                # the clock.
+                req.pages_held -= 1
                 self.stats.cow_copies += 1
                 old = req.shared_chain.pop(req.committed // ps, None)
                 if old is not None:
@@ -911,10 +1085,16 @@ class PagedServingEngine:
                     self.stats.reader_restarts += 1
                     self._preempt(req)
                 continue
-            req.committed += 1
-            self.stats.tokens_committed += 1
+            a = int(adv_np[i])  # chunk rows commit several tokens at once
+            was_prefilling = req.committed < len(req.prompt)
+            req.committed += a
+            self.stats.tokens_committed += a
+            if C > 1 and was_prefilling:
+                self.stats.prefill_tokens_chunked += a
             if req.committed >= len(req.prompt) and len(req.generated) < req.max_new_tokens:
                 req.generated.append(int(tok_np[i]))
+                if req.first_token_step is None:
+                    self._record_ttft(req)
             if len(req.generated) >= req.max_new_tokens:
                 req.state = "finished"
                 self.running.remove(req)
@@ -923,7 +1103,18 @@ class PagedServingEngine:
                 self._free_slot(req, donate=True)
         if starved:
             self._pick_victim_and_preempt(starved)
+        if C > 1:
+            # AIMD: starved chunk grants back the budget off toward the
+            # token-at-a-time regime; clean chunked steps restore it
+            if starved:
+                self._chunk_budget_cap = max(
+                    1, min(budget, self._chunk_budget_cap) // 2)
+            else:
+                self._chunk_budget_cap = min(
+                    self.prefill_chunk, max(1, self._chunk_budget_cap) * 2)
         self.stats.steps += 1
+        if C > 1:
+            self.stats.chunked_steps += 1
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         """Drive admit/step/maintain until the queue drains (or max_steps).

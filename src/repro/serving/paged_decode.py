@@ -1,4 +1,4 @@
-"""Paged decode step for decoder-LM families.
+"""Paged decode + chunked-prefill step for decoder-LM families.
 
 Same math as ``transformer.decoder_decode_step`` but the KV cache lives in
 the versioned page pool: storage [L, P, page, Hkv, D], one block table per
@@ -9,31 +9,52 @@ Two entry points:
 
 - ``paged_decode_step``: the bare model math — (logits, kv).  Kept for
   benchmarking the pre-fusion hot path and for callers that want logits.
-- ``fused_decode_step``: the serving hot path.  Page growth (batched pool
-  alloc), next-token routing (prompt replay vs. last sample), KV append,
-  attention, token selection (greedy or temperature sampling) and the OA
+- ``fused_decode_step``: the serving hot path, generalized over a **chunk
+  axis**.  Page growth (batched pool alloc, now multi-page per row),
+  next-token routing (prompt replay vs. last sample), KV append, attention,
+  token selection (greedy or temperature sampling) and the OA
   snapshot/validate protocol all execute in ONE jitted dispatch, so the
-  engine's only per-step host transfer is [B] int32 tokens + [B] bool
-  valid-rows — not logits [B, vocab] plus two version arrays.  This is the
+  engine's only per-step host transfer is one ``device_get`` of five small
+  [B] arrays — not logits [B, vocab] plus two version arrays.  This is the
   paper's amortization argument applied to the decode loop: the version
   check is cheap because it is batched and fused with the read it guards.
+
+Chunked prefill (``chunk_size=C > 1``) applies the same argument along the
+sequence axis: a row still replaying its prompt consumes up to C tokens per
+dispatch — ONE grant covering every page the chunk touches (a C-token chunk
+can straddle up to ``1 + ceil((C-1)/page_size)`` pages), ONE KV append for
+all C positions, ONE attention pass with an in-chunk causal mask, and ONE
+version validation — where the token-at-a-time path burned C full
+dispatches and C validations.  Rows decode (1 token) and prefill (C tokens)
+in the SAME step: ``chunk_budget`` (a traced scalar — no recompile) caps
+the per-row chunk so the engine's scheduler can hold a Sarathi-style token
+budget across mixed batches, and each row's live token count ``n_new`` is
+computed on device from ``lengths``/``prompt_len``.  A row samples a next
+token only when its chunk reaches the final prompt token (or it is already
+decoding); rows finishing mid-chunk simply advance ``lengths`` by their
+chunk length.
 
 The pool is superblock-structured (``core/pagepool.py``): the batched grant
 is a one-pass segmented pop that prefers PARTIAL superblocks and never
 touches UNMAPPED (physically released) ones — the anchor walk happens
 inside the same fused dispatch, so the anti-fragmentation and release
-machinery costs the hot path zero extra host syncs.
+machinery costs the hot path zero extra host syncs.  Multi-page grants are
+all-or-nothing per row (the allocator's prefix satisfaction): a starved row
+keeps zero of its requested pages, its appends are masked, and the engine
+sees ``grant_info == -1``.
 
 Copy-on-write for shared prefix pages (the refcount layer, hot-path side):
-a row whose next token lands in a page with refcount > 1 — a page it
+a row whose next write lands in a page with refcount > 1 — a page it
 shares with other requests and/or the engine's prefix cache — must not
-write in place.  The fused step allocates a fresh page for such rows in
-the SAME batched grant that serves ordinary growth, copies the shared
-page's KV into it (a batched gather/scatter over the arena, still inside
-the one dispatch), repoints the row's block table at the copy and drops
-the row's reference on the original (``unshare``: no version bump while
-other holders remain).  The engine learns what happened from the per-row
-``grant_info`` code in the step's single ``device_get``.
+write in place.  Only the FIRST page a chunk writes can be shared (pages
+past the row's committed length are always unmapped), so the fused step
+allocates the COW copy in the SAME batched grant that serves chunk growth,
+copies the shared page's KV into it (a batched gather/scatter over the
+arena, still inside the one dispatch), repoints the row's block table at
+the copy and drops the row's reference on the original (``unshare``: no
+version bump while other holders remain).  The engine learns what happened
+from the per-row ``grant_info``/``cow`` fields in the step's single
+``device_get``.
 """
 
 from __future__ import annotations
@@ -56,36 +77,61 @@ def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _decode_core(params, kv, block_tables, lengths, tokens, *, cfg,
-                 impl: str = "ref", pages_per_compute_block: int = 1,
-                 write_ok=None):
-    assert cfg.family in ("dense", "moe", "vlm"), "paged decode: decoder LMs only"
-    B = tokens.shape[0]
-    page_size = kv["k"].shape[2]
-    x = embed_tokens(cfg, params["embed"], tokens[:, None], lengths[:, None])
+def max_chunk_pages(chunk_size: int, page_size: int) -> int:
+    """Most pages a ``chunk_size``-token append can touch: the chunk's first
+    token may land on the last slot of a page, so C tokens straddle at most
+    ``1 + ceil((C-1)/page_size)`` pages (== 1 for the decode case C=1)."""
+    return 1 + (max(chunk_size, 1) - 1 + page_size - 1) // page_size
 
-    page_idx = lengths // page_size
-    slot = lengths % page_size
-    pages = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+
+def _chunk_core(params, kv, block_tables, lengths, tokens, n_new, *, cfg,
+                impl: str = "ref", pages_per_compute_block: int = 1,
+                write_ok=None):
+    """Model math for a C-token chunk per row (C = 1 is plain decode).
+
+    tokens [B, C] int32 — chunk inputs; position of tokens[b, j] is
+    ``lengths[b] + j``.  n_new [B] int32 (1..C) — live tokens per row; KV
+    appends for j >= n_new are masked, and the attention mask gives query j
+    the causal horizon of its global position.  Returns (x [B, C, d_model]
+    — final-normed hidden states, caller unembeds what it needs — and the
+    updated kv).  ``write_ok`` [B] bool masks ALL of a row's appends (the
+    starved-grant case: a denied row must not touch the shared page it
+    failed to diverge from).
+    """
+    assert cfg.family in ("dense", "moe", "vlm"), "paged decode: decoder LMs only"
+    B, C = tokens.shape
+    page_size = kv["k"].shape[2]
+    M = block_tables.shape[1]
+    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = embed_tokens(cfg, params["embed"], tokens, positions)
+
+    pos_page = positions // page_size
+    slot = positions % page_size
+    pages = jnp.take_along_axis(
+        block_tables, jnp.minimum(pos_page, M - 1), axis=1)  # [B, C]
     drop = kv["k"].shape[1]  # OOB page id -> dropped write
-    pidx = jnp.where(pages >= 0, pages, drop)
+    wvalid = (jnp.arange(C)[None, :] < n_new[:, None]) & (pages >= 0) \
+        & (pos_page < M)
     if write_ok is not None:
         # rows denied this step's page grant must not append: a starved COW
         # row still points at the SHARED page it failed to diverge from, and
         # an in-place write there would corrupt every other holder's KV
         # without any version bump to warn them
-        pidx = jnp.where(write_ok, pidx, drop)
+        wvalid = wvalid & write_ok[:, None]
+    pidx = jnp.where(wvalid, pages, drop)
+    total_len = lengths + n_new
 
     def layer(x, scanned):
         blk, kl, vl = scanned  # kl/vl [P, page, Hkv, D]
         h = apply_norm(cfg, x, blk["ln1"])
-        q, k, v = attention_qkv(cfg, h, blk["attn"], lengths[:, None])
-        kl = kl.at[pidx, slot].set(k[:, 0], mode="drop")
-        vl = vl.at[pidx, slot].set(v[:, 0], mode="drop")
-        att = paged_attention(q[:, 0], {"k": kl, "v": vl}, block_tables,
-                              lengths + 1, impl=impl,
-                              pages_per_compute_block=pages_per_compute_block)
-        x = x + att.reshape(B, 1, -1) @ blk["attn"]["wo"]
+        q, k, v = attention_qkv(cfg, h, blk["attn"], positions)
+        kl = kl.at[pidx, slot].set(k, mode="drop")
+        vl = vl.at[pidx, slot].set(v, mode="drop")
+        att = paged_attention(q, {"k": kl, "v": vl}, block_tables,
+                              total_len, impl=impl,
+                              pages_per_compute_block=pages_per_compute_block,
+                              chunk_lens=n_new)
+        x = x + att.reshape(B, C, -1) @ blk["attn"]["wo"]
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
             from repro.models.moe import moe_apply
@@ -96,8 +142,7 @@ def _decode_core(params, kv, block_tables, lengths, tokens, *, cfg,
 
     x, (ks, vs) = jax.lax.scan(layer, x, (params["blocks"], kv["k"], kv["v"]))
     x = apply_norm(cfg, x, params["final_norm"])
-    logits = unembed(cfg, params, x)[:, 0].astype(jnp.float32)
-    return logits, {"k": ks, "v": vs}
+    return x, {"k": ks, "v": vs}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(1,))
@@ -110,20 +155,26 @@ def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
     the new token lands at position ``lengths``); tokens [B] int32.
     Returns (logits [B, vocab], kv).
     """
-    return _decode_core(params, kv, block_tables, lengths, tokens, cfg=cfg,
-                        impl=impl)
+    ones = jnp.ones_like(lengths)
+    x, kv = _chunk_core(params, kv, block_tables, lengths, tokens[:, None],
+                        ones, cfg=cfg, impl=impl)
+    logits = unembed(cfg, params, x)[:, 0].astype(jnp.float32)
+    return logits, kv
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "impl", "greedy", "pages_per_compute_block"),
+    static_argnames=("cfg", "impl", "greedy", "pages_per_compute_block",
+                     "chunk_size"),
     donate_argnums=(1, 2, 3, 4, 5, 6),
 )
 def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
                       last_tok, active, prompt_buf, prompt_len, key,
-                      temperature, *, cfg, impl: str = "ref",
-                      greedy: bool = True, pages_per_compute_block: int = 1):
-    """The sync-free batched decode step: one dispatch, one host transfer.
+                      temperature, chunk_budget=1, *, cfg, impl: str = "ref",
+                      greedy: bool = True, pages_per_compute_block: int = 1,
+                      chunk_size: int = 1):
+    """The sync-free batched step: one dispatch, one host transfer — now
+    covering up to ``chunk_size`` prompt tokens per prefilling row.
 
     Device-resident engine state (all donated, threaded step to step):
       kv            {'k','v': [L, P, page, Hkv, D]} — persistent KV arena
@@ -135,92 +186,141 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
       active        [B] bool — slot occupancy mask (inactive rows frozen)
       prompt_buf    [B, cap] int32 / prompt_len [B] int32 — prompt replay
       key           PRNG key for sampling; temperature [] f32 (greedy=False)
+      chunk_budget  [] int32 (traced — no recompile): per-row chunk cap this
+                    step, the engine's Sarathi-style token-budget knob;
+                    clipped to [1, chunk_size]
 
-    Fused pipeline: (1) batched page growth + copy-on-write — rows whose
-    new token lands on an unmapped page get one page from the pool via the
-    prefix-granting batch allocator; rows whose new token lands in a SHARED
-    page (refcount > 1 — a prompt-prefix page granted by the engine's
-    prefix cache) get a fresh page too, the shared page's KV is copied into
-    it and the row's reference on the original is dropped (COW divergence),
-    with the grant's version folded into the snapshot either way;
-    (2) input routing — prompt token while ``lengths < prompt_len``, else
-    the previous sample; (3) model math (KV append + paged attention);
-    (4) on-device token selection; (5) fused OA validation against the
-    persistent snapshot.  Rows fail validation if a page they read was
-    reclaimed since its snapshot (version bump) or if their grant was
-    starved; only valid rows advance ``lengths``/``last_tok``.
+    Fused pipeline: (1) per-row chunk sizing — ``n_new = min(chunk_budget,
+    prompt_len − lengths)`` for prefilling rows, 1 for decoding rows, so a
+    mixed batch advances both in the same dispatch; (2) batched multi-page
+    growth + copy-on-write — every page the chunk's append range
+    ``[lengths, lengths + n_new)`` touches that is still unmapped gets a
+    page from ONE prefix-granting batch allocation (per-row counts up to
+    ``max_chunk_pages``), and a row whose first written page is SHARED
+    (refcount > 1 — a prompt-prefix page granted by the engine's prefix
+    cache) additionally gets a fresh page in the same grant, the shared
+    page's KV is copied into it and the row's reference on the original is
+    dropped (COW divergence); every granted page's version is folded into
+    the snapshot; (3) input routing — prompt tokens while ``lengths <
+    prompt_len``, else the previous sample; (4) model math (chunked KV
+    append + chunked paged attention with the in-chunk causal mask);
+    (5) on-device token selection from the chunk's LAST live position —
+    meaningful only for rows whose chunk reaches the final prompt token
+    (``samples``), which is every decoding row and exactly the prefilling
+    rows completing this step; (6) ONE fused OA validation against the
+    persistent snapshot covering all ``n_new`` tokens.  Rows fail
+    validation if a page they read was reclaimed since its snapshot
+    (version bump) or if their grant was starved; only valid rows advance
+    ``lengths``/``last_tok``.
 
     Returns (kv, pool, block_tables, snapshot, lengths, last_tok,
-    tokens [B] int32, valid [B] bool, grant_info [B] int32).  The engine
-    does a single ``device_get`` of the last three.  ``grant_info`` codes:
-    0 = no page needed, 1 = fresh page granted, 2 = COW copy performed,
-    −1 = page needed but the pool is dry (the row is starved — it did not
-    advance and the scheduler must reclaim/remap before it can).
+    tokens [B] int32, valid [B] bool, grant_info [B] int32, cow [B] bool,
+    adv [B] int32).  The engine does a single ``device_get`` of the last
+    five.  ``grant_info`` is the number of fresh pages granted to the row
+    this step (0..max_chunk_pages), or −1 when the row needed pages but the
+    pool is dry (the row is starved — it did not advance and the scheduler
+    must reclaim/remap before it can; grants are all-or-nothing per row).
+    ``cow`` flags rows whose first grant was a COW copy of a shared page
+    (refcount handoff — the copy replaces, not extends, the row's
+    footprint).  ``adv`` is how many tokens the row actually committed
+    (0 for invalid rows, ``n_new`` otherwise).
     """
     B = block_tables.shape[0]
+    M = block_tables.shape[1]
     page_size = kv["k"].shape[2]
     num_pages = kv["k"].shape[1]
+    C = max(int(chunk_size), 1)
+    MG = max_chunk_pages(C, page_size)
     rows = jnp.arange(B)
 
-    # (1) batched page growth + COW — the fused alloc_pages_batch path
-    page_idx = lengths // page_size
-    cur_page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
-    cur_rc = pool.page_refcount[jnp.clip(cur_page, 0, num_pages - 1)]
-    need_new = active & (cur_page < 0)
-    # the write target is shared: diverge onto a private copy before the
-    # KV append below can touch it
-    need_copy = active & (cur_page >= 0) & (cur_rc > 1)
-    need = (need_new | need_copy).astype(jnp.int32)
-    pool, grants, _ = pp._alloc_pages_batch_impl(pool, need, 1)
-    g = grants[:, 0]
-    granted = g >= 0
+    # (1) per-row chunk sizing (device-side: no host knowledge of lengths)
+    budget = jnp.clip(jnp.asarray(chunk_budget, jnp.int32), 1, C)
+    prefilling = lengths < prompt_len
+    n_new = jnp.where(active & prefilling,
+                      jnp.minimum(budget, prompt_len - lengths),
+                      1).astype(jnp.int32)
+
+    # (2) batched multi-page growth + COW — one fused alloc_pages_batch for
+    # every page the batch's chunks touch
+    p0 = lengths // page_size
+    plast = (lengths + n_new - 1) // page_size
+    koff = jnp.arange(MG, dtype=jnp.int32)
+    pis = p0[:, None] + koff[None, :]  # [B, MG] candidate page slots
+    in_range = (pis <= plast[:, None]) & (pis < M)
+    cur = jnp.take_along_axis(block_tables, jnp.minimum(pis, M - 1), axis=1)
+    cur0 = cur[:, 0]
+    rc0 = pool.page_refcount[jnp.clip(cur0, 0, num_pages - 1)]
+    # the chunk's FIRST written page is the only one that can be mapped yet
+    # shared (pages past the committed length are unmapped): diverge onto a
+    # private copy before the KV append below can touch it
+    need_copy = active & (cur0 >= 0) & (rc0 > 1)
+    need_slot = in_range & (cur < 0) & active[:, None]
+    need_slot = need_slot | (need_copy[:, None] & (koff == 0)[None, :])
+    need = jnp.sum(need_slot, axis=1).astype(jnp.int32)
+    pool, grants, _ = pp._alloc_pages_batch_impl(pool, need, MG)
+    # pack each row's grants onto its needing slots, in page order
+    gidx = jnp.cumsum(need_slot, axis=1) - 1
+    g = jnp.take_along_axis(grants, jnp.clip(gidx, 0, MG - 1), axis=1)
+    g = jnp.where(need_slot, g, -1).astype(jnp.int32)
+    grant_n = jnp.sum((g >= 0).astype(jnp.int32), axis=1)
+    grant_ok = (need == 0) | (grant_n == need)  # all-or-nothing per row
     # COW: copy the shared page's KV into the fresh copy (whole-page
     # gather/scatter across all layers; OOB src/dst rows are dropped)
-    cow = need_copy & granted
-    src = jnp.where(cow, cur_page, num_pages)
-    dst = jnp.where(cow, g, num_pages)
+    cow = need_copy & (g[:, 0] >= 0)
+    src = jnp.where(cow, cur0, num_pages)
+    dst = jnp.where(cow, g[:, 0], num_pages)
     src_c = jnp.clip(src, 0, num_pages - 1)
     kv = {"k": kv["k"].at[:, dst].set(kv["k"][:, src_c], mode="drop"),
           "v": kv["v"].at[:, dst].set(kv["v"][:, src_c], mode="drop")}
     # ...and drop the row's reference on the original (other holders keep
     # their versions valid; if this was the LAST reference the page frees
     # and its version bumps — correct either way, all in this dispatch)
-    pool = pp._unshare_pages_impl(pool, jnp.where(cow, cur_page, -1))
-    block_tables = block_tables.at[rows, page_idx].set(
-        jnp.where(granted, g, cur_page))
-    snapshot = snapshot.at[rows, page_idx].set(
-        jnp.where(granted, pool.page_version[jnp.maximum(g, 0)],
-                  snapshot[rows, page_idx]))
-    grant_ok = (need == 0) | granted
-    grant_info = jnp.where(
-        need == 0, 0,
-        jnp.where(~granted, -1, jnp.where(cow, 2, 1))).astype(jnp.int32)
+    pool = pp._unshare_pages_impl(pool, jnp.where(cow, cur0, -1))
+    # install the grants and fold their versions into the snapshot
+    pis_w = jnp.where(g >= 0, pis, M)  # column M = OOB -> dropped scatter
+    block_tables = block_tables.at[rows[:, None], pis_w].set(g, mode="drop")
+    vers = pool.page_version[jnp.clip(g, 0, num_pages - 1)]
+    snapshot = snapshot.at[rows[:, None], pis_w].set(
+        vers.astype(jnp.uint32), mode="drop")
+    grant_info = jnp.where(grant_ok, grant_n, -1).astype(jnp.int32)
 
-    # (2) next input token: replay the prompt, then feed back the sample
+    # (3) next input tokens: replay the prompt, then feed back the sample.
+    # The position clamp is for DECODE rows' padded lanes (their positions
+    # legitimately exceed the buffer — the where() discards them); admission
+    # guarantees every real prompt position fits (engine.submit rejects
+    # prompts beyond capacity instead of silently clamping).
     cap = prompt_buf.shape[1]
-    ppos = jnp.minimum(lengths, cap - 1)
-    tok_in = jnp.where(
-        lengths < prompt_len,
-        jnp.take_along_axis(prompt_buf, ppos[:, None], axis=1)[:, 0],
-        last_tok)
+    pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    ppos = jnp.minimum(pos, cap - 1)
+    ptok = jnp.take_along_axis(prompt_buf, ppos, axis=1)
+    tok_in = jnp.where(pos < prompt_len[:, None], ptok, last_tok[:, None])
 
-    # (3) model math (starved rows' appends are masked — see _decode_core)
-    logits, kv = _decode_core(
-        params, kv, block_tables, lengths, tok_in, cfg=cfg, impl=impl,
+    # (4) model math (starved rows' appends are masked — see _chunk_core)
+    x, kv = _chunk_core(
+        params, kv, block_tables, lengths, tok_in, n_new, cfg=cfg, impl=impl,
         pages_per_compute_block=pages_per_compute_block, write_ok=grant_ok)
 
-    # (4) on-device token selection — logits never leave the device
+    # (5) on-device token selection from the chunk's last live position —
+    # logits never leave the device, and only that one position is unembedded
+    last_idx = jnp.clip(n_new - 1, 0, C - 1)
+    xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+    logits = unembed(cfg, params, xl)[:, 0].astype(jnp.float32)
     if greedy:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     else:
         nxt = jax.random.categorical(
             key, logits / jnp.maximum(temperature, 1e-6), axis=-1
         ).astype(jnp.int32)
+    # a row's sample is a real next token only once its chunk reaches the
+    # final prompt token (decode rows always; prefilling rows exactly on the
+    # step their prompt completes)
+    samples = (lengths + n_new) >= prompt_len
 
-    # (5) fused OA validation: one pass over page_version per step
+    # (6) fused OA validation: one pass over page_version for all C tokens
     valid, _ = pp._validate_and_commit_impl(pool, block_tables, snapshot)
     valid = valid & active & grant_ok
-    lengths = jnp.where(valid, lengths + 1, lengths)
-    last_tok = jnp.where(valid, nxt, last_tok)
+    adv = jnp.where(valid, n_new, 0).astype(jnp.int32)
+    lengths = lengths + adv
+    last_tok = jnp.where(valid & samples, nxt, last_tok)
     return (kv, pool, block_tables, snapshot, lengths, last_tok,
-            nxt, valid, grant_info)
+            nxt, valid, grant_info, cow, adv)

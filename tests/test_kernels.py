@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.ops import paged_attention
-from repro.kernels.ref import paged_attention_ref
+from repro.kernels.ref import paged_attention_chunked_ref, paged_attention_ref
 
 CASES = [
     # (P, page, Hkv, D, Hq, B, max_pages)
@@ -130,6 +130,101 @@ def test_kv_append_matches_reference(dtype):
                                   np.asarray(ref["k"], np.float32))
     np.testing.assert_array_equal(np.asarray(out["v"], np.float32),
                                   np.asarray(ref["v"], np.float32))
+
+
+def _chunked_case(case, C, seed=7):
+    """Random chunked sweep instance: ragged lengths, chunks straddling page
+    boundaries, rows finishing mid-chunk (chunk_lens < C)."""
+    P, page, Hkv, D, Hq, B, maxp = case
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 3)
+    kv = {"k": jax.random.normal(ks[0], (P, page, Hkv, D), jnp.float32),
+          "v": jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)}
+    q = jax.random.normal(ks[2], (B, C, Hq, D), jnp.float32)
+    bt = np.full((B, maxp), -1, np.int32)
+    rnd = np.random.default_rng(seed)
+    pool = rnd.permutation(P)
+    used = 0
+    lens, cls = [], []
+    for b in range(B):
+        n = int(rnd.integers(1, maxp + 1))
+        bt[b, :n] = pool[used : used + n]
+        used += n
+        ln = int(rnd.integers(1, n * page + 1))
+        lens.append(ln)
+        # rows finishing mid-chunk: some chunk_lens < C; a chunk of c live
+        # queries ending at position ln-1 starts at ln-c — straddling a page
+        # boundary whenever (ln - c) // page != (ln - 1) // page
+        cls.append(int(rnd.integers(1, min(C, ln) + 1)))
+    return (q, kv, jnp.asarray(bt), jnp.asarray(lens, jnp.int32),
+            jnp.asarray(cls, jnp.int32))
+
+
+@pytest.mark.parametrize("C", [1, 8, 16])
+@pytest.mark.parametrize("ppcb", [1, 2, 4])
+def test_chunked_matches_ref_sweep(C, ppcb):
+    """Chunked Pallas kernel vs the chunked jnp oracle across C ∈ {1,8,16} ×
+    ppcb ∈ {1,2,4}: GQA, ragged lengths, unmapped slots, page-boundary
+    straddles, rows finishing mid-chunk (the ISSUE acceptance sweep)."""
+    case = (16, 4, 2, 16, 4, 3, 6)  # page_size 4 < C: chunks straddle pages
+    q, kv, bt, lens, cls = _chunked_case(case, C)
+    ref = paged_attention_chunked_ref(q, kv["k"], kv["v"], bt, lens, cls)
+    out = paged_attention(q, kv, bt, lens, impl="interpret",
+                          pages_per_compute_block=ppcb, chunk_lens=cls)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_chunked_matches_ref_shapes(case):
+    """The chunked sweep across the MQA/GQA/MHA shape matrix (C=8 fixed)."""
+    q, kv, bt, lens, cls = _chunked_case(case, 8, seed=11)
+    ref = paged_attention_chunked_ref(q, kv["k"], kv["v"], bt, lens, cls)
+    out = paged_attention(q, kv, bt, lens, impl="interpret",
+                          pages_per_compute_block=2, chunk_lens=cls)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_c1_equals_decode_path():
+    """A C=1 chunk with chunk_lens=1 must reproduce the decode kernel (and
+    the decode oracle) exactly — the chunk axis is a strict generalization."""
+    P, page, Hkv, D, Hq, B, maxp = CASES[0]
+    q, kv, bt, lens, cls = _chunked_case((P, page, Hkv, D, Hq, B, maxp), 1)
+    dec = paged_attention(q[:, 0], kv, bt, lens, impl="interpret")
+    chk = paged_attention(q, kv, bt, lens, impl="interpret", chunk_lens=cls)
+    np.testing.assert_allclose(np.asarray(chk[:, 0]), np.asarray(dec),
+                               atol=1e-6, rtol=1e-6)
+    ref = paged_attention_ref(q[:, 0], kv["k"], kv["v"], bt, lens)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_causal_mask_matches_incremental_decode():
+    """Ground truth for the in-chunk causal mask: appending C tokens and
+    attending them in ONE chunked call must equal C sequential decode calls
+    (append one token, attend, repeat) — the exact replacement the fused
+    prefill step performs, across a page-boundary straddle."""
+    P, page, Hkv, D, Hq, C = 8, 4, 2, 16, 4, 6
+    rng = jax.random.PRNGKey(5)
+    ks = jax.random.split(rng, 4)
+    kv = {"k": jax.random.normal(ks[0], (P, page, Hkv, D), jnp.float32),
+          "v": jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)}
+    qs = jax.random.normal(ks[2], (C, Hq, D), jnp.float32)
+    bt = jnp.array([[3, 6, 1, -1]], jnp.int32)
+    base = 2  # chunk spans positions 2..7: straddles the page-0/1 boundary
+    # sequential: token t attends pos < base + t + 1
+    seq = [paged_attention(qs[t][None], kv, bt,
+                           jnp.array([base + t + 1], jnp.int32),
+                           impl="interpret")[0]
+           for t in range(C)]
+    # chunked: one call, total length base + C, all C queries live
+    out = paged_attention(qs[None], kv, bt,
+                          jnp.array([base + C], jnp.int32),
+                          impl="interpret",
+                          chunk_lens=jnp.array([C], jnp.int32))[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.stack(seq)),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_stale_table_reads_are_safe_not_correct():

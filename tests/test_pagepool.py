@@ -105,7 +105,11 @@ def test_versions_monotone(nfree):
 def test_superblock_interleavings_never_dup_or_leak_unmapped(data):
     """Any interleaving of alloc_pages_batch / free_pages /
     release_empty_superblocks / map_superblocks never duplicates a live page
-    id and never hands out a page from an unmapped superblock."""
+    id and never hands out a page from an unmapped superblock — including
+    MULTI-PAGE per-row grants (a chunked-prefill row can demand up to
+    ``max_grow`` pages in one pop), whose rows must be satisfied
+    all-or-nothing.  The per-superblock anchors (``sb_free``) are checked
+    EXACTLY against a host mirror after every op."""
     npages = data.draw(st.integers(4, 24))
     K = data.draw(st.integers(1, 6))
     pool = pp.pool_init(npages, pages_per_superblock=K)
@@ -117,15 +121,23 @@ def test_superblock_interleavings_never_dup_or_leak_unmapped(data):
         op = data.draw(st.sampled_from(["alloc", "free", "release", "map"]))
         if op == "alloc":
             B = data.draw(st.integers(1, 4))
-            need = jnp.asarray(
-                [data.draw(st.integers(0, 2)) for _ in range(B)], jnp.int32)
-            pool, grants, _ = pp.alloc_pages_batch(pool, need, 2)
-            got = [int(p) for p in np.asarray(grants).ravel() if p >= 0]
+            max_grow = data.draw(st.integers(1, 4))
+            need = [data.draw(st.integers(0, max_grow)) for _ in range(B)]
+            pool, grants, ok = pp.alloc_pages_batch(
+                pool, jnp.asarray(need, jnp.int32), max_grow)
+            g = np.asarray(grants)
+            got = [int(p) for p in g.ravel() if p >= 0]
             mapped = set(np.flatnonzero(np.asarray(pool.sb_mapped)).tolist())
             assert len(got) == len(set(got)), "duplicate grant within batch"
             for p in got:
                 assert p not in live, "double allocation of a live page"
                 assert p // K in mapped, "grant from an unmapped superblock"
+            for b in range(B):  # multi-page rows are all-or-nothing
+                row = [int(p) for p in g[b] if p >= 0]
+                assert len(row) in (0, need[b]), \
+                    "partially satisfied multi-page row"
+            if bool(ok):
+                assert len(got) == sum(need), "ok=True but rows were starved"
             live.update(got)
         elif op == "free" and live:
             k = data.draw(st.integers(1, len(live)))
@@ -144,6 +156,12 @@ def test_superblock_interleavings_never_dup_or_leak_unmapped(data):
         mapped = set(np.flatnonzero(np.asarray(pool.sb_mapped)).tolist())
         for p in live:
             assert p // K in mapped, "release unmapped a live page"
+        # the device anchors match the host mirror EXACTLY, superblock by
+        # superblock: free count == capacity − live pages homed there
+        live_in = [sum(1 for p in live if p // K == s) for s in range(S)]
+        np.testing.assert_array_equal(
+            np.asarray(pool.sb_free), [caps[s] - live_in[s] for s in range(S)],
+            err_msg="device sb_free anchors diverged from the host mirror")
         expect_free = sum(caps[s] for s in mapped) - len(live)
         assert int(pool.free_top) == expect_free
 

@@ -103,6 +103,37 @@ def test_steady_state_single_transfer_with_prefix_cache(monkeypatch, params):
         f"with prefix sharing active (allowed at most 1 per step)")
 
 
+def test_mixed_prefill_decode_step_is_single_transfer(monkeypatch, params):
+    """Chunked prefill must not cost the hot path anything either: a step
+    whose batch MIXES a decoding row with a chunk-prefilling row (the
+    C>1 executable: multi-page grants, chunked KV append, in-chunk causal
+    attention, one fused validation) is still one ``device_get`` per step.
+    The chunk budget rides a host→device scalar upload, never a download."""
+    eng = PagedServingEngine(CFG, params, num_pages=64, page_size=4,
+                             max_batch=2, max_pages_per_seq=12,
+                             prefill_chunk=4)
+    ra = eng.submit(list(range(1, 5)), 30)
+    eng._admit()
+    for _ in range(6):  # ra finishes its prompt and decodes
+        eng.step()
+    assert ra.committed >= len(ra.prompt)
+    eng.submit(list(range(2, 40)), 8)  # long prompt: prefills in chunks
+    eng._admit()
+    eng.step()  # compile the mixed (C>1) executable outside the window
+    counter = _TransferCounter()
+    _instrument(monkeypatch, counter)
+    nsteps = 4
+    for _ in range(nsteps):
+        prefilling = sum(1 for r in eng.running
+                         if r.committed < len(r.prompt))
+        assert prefilling >= 1, "window must contain prefill work"
+        assert len(eng.running) - prefilling >= 1, "and a decoding row"
+        eng.step()
+    assert counter.count <= nsteps, (
+        f"{counter.count} host transfers across {nsteps} mixed "
+        f"prefill/decode steps (sync-free hot path allows at most 1 per step)")
+
+
 def test_steady_state_results_still_correct(params):
     """The instrumented path above must not be a different code path: the
     same workload, run normally, matches a per-request dense result."""
