@@ -3,18 +3,20 @@ virtual-memory release (host layer), and its TPU-native adaptation —
 a refcounted, versioned paged KV-cache pool with optimistic-access
 semantics (device layer, see pagepool.py)."""
 
+from .allocator import Allocator, AllocatorView
 from .atomic import AtomicRef, AtomicCounter, ReclaimStats, memory_barrier
 from .sizeclass import SIZE_CLASSES, MAX_SZ, size_to_class, class_block_size
 from .vm import Arena, ReleaseStrategy, LargeAllocation, PAGE_SIZE
-from .lrmalloc import LRMalloc, AllocatorStats, FULL, PARTIAL, EMPTY
+from .lrmalloc import LRMalloc, AllocatorStats, HostAllocator, FULL, PARTIAL, EMPTY
 from .reclaim import NR, OA, OABit, OAVer, RECLAIMERS, ReclaimerBase, ThreadCtx
 from .datastructures import HarrisMichaelList, MichaelHashTable, NODE_SIZE
 
 __all__ = [
+    "Allocator", "AllocatorView",
     "AtomicRef", "AtomicCounter", "ReclaimStats", "memory_barrier",
     "SIZE_CLASSES", "MAX_SZ", "size_to_class", "class_block_size",
     "Arena", "ReleaseStrategy", "LargeAllocation", "PAGE_SIZE",
-    "LRMalloc", "AllocatorStats", "FULL", "PARTIAL", "EMPTY",
+    "LRMalloc", "AllocatorStats", "HostAllocator", "FULL", "PARTIAL", "EMPTY",
     "NR", "OA", "OABit", "OAVer", "RECLAIMERS", "ReclaimerBase", "ThreadCtx",
     "HarrisMichaelList", "MichaelHashTable", "NODE_SIZE",
 ]

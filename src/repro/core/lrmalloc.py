@@ -29,6 +29,7 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 
+from .allocator import AllocatorView
 from .atomic import AtomicRef
 from .sizeclass import MAX_SZ, NUM_CLASSES, class_block_size, size_to_class
 from .vm import Arena, LargeAllocation, ReleaseStrategy
@@ -197,6 +198,23 @@ class LRMalloc:
         for key in list(self._cache.stacks):
             self._flush_cache(key, len(self._cache.stacks[key]))
 
+    def flush_cache_blocks(self, n: int = 1) -> int:
+        """Flush up to ``n`` blocks from THIS thread's caches back to their
+        superblocks (EMPTY transitions retire per the release strategy).
+        Returns the number actually flushed (0 = caches empty).  The public
+        fine-grained hook incremental release policies need — e.g. the
+        ``HostAllocator`` adapter flushing until a mapped-superblock floor
+        is reached; like ``flush_all_caches`` it only sees the calling
+        thread's cache."""
+        flushed = 0
+        for key in list(self._cache.stacks):
+            while flushed < n and self._cache.stacks.get(key):
+                self._flush_cache(key, 1)
+                flushed += 1
+            if flushed >= n:
+                break
+        return flushed
+
     # -- size-class path ---------------------------------------------------------
 
     def _malloc_sc(self, ci: int, persistent: bool) -> int:
@@ -355,3 +373,141 @@ class LRMalloc:
         self.arena.close()
         for la in self._large.values():
             la.close()
+
+
+class HostAllocator:
+    """:class:`repro.core.allocator.Allocator` over an :class:`LRMalloc`.
+
+    Units are fixed-size *persistent* blocks (``palloc``: the range stays
+    readable after free — the OA guarantee), refcounted by the adapter so
+    the host model supports the same share/unshare vocabulary as the device
+    pool: a block frees (and its VERSION bumps — the OA-VER warning) only on
+    the refcount zero-transition, so several owners of one block compose
+    with optimistic readers exactly as KV-page sharing does on the device.
+
+    Superblock accounting maps onto LRMalloc's own lifecycle: an EMPTY
+    persistent superblock runs the configured release strategy at its
+    retire transition and parks its descriptor in the mapped pool, which a
+    later fill reuses (``map`` is therefore lazy here — remapping happens
+    on the allocation path, and :meth:`map` reports ``(0, 0)``).  The
+    adapter owns its private LRMalloc, so every superblock it sees is a
+    persistent one and the counter arithmetic in :meth:`view` is exact.
+    """
+
+    def __init__(self, block_bytes: int = 64, num_superblocks: int = 64,
+                 superblock_size: int = 64 * 1024,
+                 release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE):
+        if block_bytes > MAX_SZ:
+            raise ValueError("persistent blocks are size-class sized (§4)")
+        self._lr = LRMalloc(num_superblocks=num_superblocks,
+                            superblock_size=superblock_size,
+                            strategy=release_strategy)
+        self.block_bytes = class_block_size(size_to_class(block_bytes))
+        self.release_strategy = release_strategy
+        self.state = None  # host state is internal (protocol: opaque anyway)
+        self._refcount: dict[int, int] = {}
+        self._version: dict[int, int] = {}
+
+    def alloc(self, n: int) -> tuple[list[int], bool]:
+        """Grant ``n`` persistent blocks at refcount 1.  All-or-nothing: on
+        arena exhaustion every block of the partial grant is returned and
+        ``([], False)`` comes back — the caller reclaims and retries."""
+        got: list[int] = []
+        try:
+            for _ in range(n):
+                got.append(self._lr.palloc(self.block_bytes))
+        except MemoryError:
+            for off in got:
+                self._lr.free(off)
+            return [], False
+        for off in got:
+            self._refcount[off] = 1
+            self._version.setdefault(off, 0)
+        return got, True
+
+    def free(self, units) -> None:
+        """Drop one reference per block (negative ids ignored); the
+        zero-transition bumps the block's version (readers of a stale
+        snapshot fail validation) and returns it to the heap — where an
+        EMPTY superblock's retire transition runs the release strategy."""
+        for off in units:
+            off = int(off)
+            if off < 0:
+                continue
+            rc = self._refcount.get(off, 0)
+            if rc <= 1:
+                if rc == 1:
+                    self._refcount.pop(off)
+                    self._version[off] = self._version.get(off, 0) + 1
+                    self._lr.free(off)
+                continue  # double-free of a free block: a no-op, like the pool
+            self._refcount[off] = rc - 1
+
+    def unshare(self, units) -> None:
+        """Alias of :meth:`free` (the refcount vocabulary)."""
+        self.free(units)
+
+    def share(self, units) -> bool:
+        """Add one reference per LIVE block; naming a free block suppresses
+        every increment and returns False (use-after-free in the making)."""
+        offs = [int(o) for o in units if int(o) >= 0]
+        if any(self._refcount.get(o, 0) == 0 for o in offs):
+            return False
+        for o in offs:
+            self._refcount[o] += 1
+        return True
+
+    def release(self, keep_superblocks: int) -> tuple[int, int]:
+        """Flush the thread caches so EMPTY persistent superblocks reach
+        their retire transition (frames dropped per the strategy, the
+        descriptor parked still owning the range), stopping once the
+        mapped count touches the ``keep_superblocks`` floor.  Superblocks
+        holding any live block are never releasable regardless; flushing
+        happens block-by-block so a retire that lands the floor halts
+        further releases.  Returns the delta ``(n_superblocks, n_blocks)``
+        this call released."""
+        if self.release_strategy is ReleaseStrategy.KEEP:
+            return 0, 0
+        before = self._lr.stats.persistent_released
+        keep = max(0, keep_superblocks)
+        while self.view().superblocks_mapped > keep:
+            if self._lr.flush_cache_blocks(1) == 0:
+                break  # caches drained: whatever is left holds live blocks
+        got = self._lr.stats.persistent_released - before
+        return got, got * (self._lr.sb_size // self.block_bytes)
+
+    def map(self, n_superblocks: int) -> tuple[int, int]:
+        """LRMalloc remaps lazily: the next cache fill pops a parked
+        descriptor from the mapped pool and ``prepare_reuse`` restores the
+        range (§3.2) — there is nothing to do eagerly, so this reports
+        ``(0, 0)`` and the remap shows up in :meth:`view` afterwards."""
+        return 0, 0
+
+    def snapshot(self, units):
+        """Current versions of ``units`` (negative ids read as 0) — the OA
+        reader's LocalClock, host-dict edition."""
+        return [0 if int(o) < 0 else self._version.get(int(o), 0)
+                for o in units]
+
+    def view(self) -> AllocatorView:
+        """Anchor introspection from the LRMalloc counters (exact because
+        this adapter's private heap only ever holds persistent blocks)."""
+        s = self._lr.stats
+        return AllocatorView(
+            superblocks_total=self._lr.arena.num_sb,
+            superblocks_mapped=s.superblocks_created - s.persistent_released,
+            superblocks_released=s.persistent_released,
+            superblocks_remapped=s.superblocks_reused_mapped,
+            pages_mapped=((s.superblocks_created - s.persistent_released)
+                          * (self._lr.sb_size // self.block_bytes)),
+            pages_per_superblock=self._lr.sb_size // self.block_bytes,
+            release_strategy=self.release_strategy.value,
+        )
+
+    def resident_bytes(self) -> int:
+        """Physically resident bytes of the backing arena (smaps Pss)."""
+        return self._lr.resident_bytes()
+
+    def close(self) -> None:
+        """Release the backing arena mapping."""
+        self._lr.close()

@@ -77,10 +77,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .allocator import AllocatorView
 from .vm import ReleaseStrategy  # shared release vocabulary (host + device)
 
 __all__ = [
-    "PagePool", "ReleaseStrategy", "pool_init",
+    "PagePool", "DevicePagePool", "ReleaseStrategy", "pool_init",
     "SB_FULL", "SB_PARTIAL", "SB_EMPTY", "SB_UNMAPPED", "superblock_states",
     "alloc_pages", "alloc_pages_batch", "free_pages",
     "share_pages", "unshare_pages",
@@ -555,6 +556,121 @@ def append_kv(kv, block_tables, lengths, k_new, v_new):
     k = kv["k"].at[p, slot].set(k_new, mode="drop")
     v = kv["v"].at[p, slot].set(v_new, mode="drop")
     return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# the stateful Allocator-protocol adapter (core.allocator.Allocator)
+
+
+class DevicePagePool:
+    """Stateful :class:`repro.core.allocator.Allocator` over the pure pool ops.
+
+    Owns the :class:`PagePool` pytree (``state``) plus the host mirrors of
+    the superblock anchors — mapped / released / remapped counts that the
+    engine used to duplicate in ``EngineStats`` and private fields.  The
+    mirrors move only at the explicit ``release``/``map`` sync points, so
+    reading :meth:`view` never costs a device transfer; the hot path
+    (``serving.paged_decode.fused_decode_step``) keeps threading the raw
+    pytree through its fused dispatch and hands it back via ``state``.
+    """
+
+    def __init__(self, num_pages: int,
+                 pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK,
+                 release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE):
+        self.state = pool_init(num_pages, pages_per_superblock)
+        self.release_strategy = release_strategy
+        self.superblocks_total = self.state.num_superblocks
+        self.superblocks_mapped = self.superblocks_total
+        self.superblocks_released = 0  # cumulative
+        self.superblocks_remapped = 0  # cumulative
+        self.pages_mapped = num_pages
+
+    @property
+    def num_pages(self) -> int:
+        """Total pages in the arena (constant: palloc'd once)."""
+        return self.state.num_pages
+
+    @property
+    def pages_per_superblock(self) -> int:
+        """Release granularity (pages per superblock)."""
+        return self.state.pages_per_superblock
+
+    def alloc(self, n: int) -> tuple[list[int], bool]:
+        """Pop ``n`` pages (refcount 1 each).  Returns ``(ids, ok)``; on
+        exhaustion ``ok`` is False, nothing changes and ``ids`` is empty.
+        An allowed sync point: the grant is materialised to host ints so
+        the caller's bookkeeping stays device-free."""
+        self.state, pages, ok = alloc_pages(self.state, n)
+        pages_np, ok = jax.device_get((pages, ok))
+        if not bool(ok):
+            return [], False
+        return [int(p) for p in pages_np], True
+
+    def free(self, pages) -> None:
+        """Drop one reference per page (−1 ignored); zero-transitions
+        re-enter the free list with a version bump + one clock tick per
+        batch.  Accepts host lists or device arrays (a block-table row) —
+        no host transfer either way."""
+        self.state = free_pages(self.state, jnp.asarray(pages, jnp.int32))
+
+    def unshare(self, pages) -> None:
+        """Alias of :meth:`free` (the refcount vocabulary)."""
+        self.free(pages)
+
+    def share(self, pages) -> bool:
+        """Add one reference per live page; returns False (and suppresses
+        the increment) if any id named a FREE page.  Syncs on the ok flag —
+        sharing happens at admission, an allowed sync point."""
+        self.state, ok = share_pages(self.state, jnp.asarray(pages, jnp.int32))
+        return bool(ok)
+
+    def release(self, keep_superblocks: int) -> tuple[int, int]:
+        """Take EMPTY superblocks above the floor out of circulation
+        (versions bump; the clock ticks once per non-empty batch).  Updates
+        the anchor mirrors; returns ``(n_superblocks, n_pages)``.  A
+        ``KEEP`` pool never releases (the paper's portable baseline)."""
+        if self.release_strategy is ReleaseStrategy.KEEP:
+            return 0, 0
+        self.state, n_sb, n_pg = release_empty_superblocks(
+            self.state, jnp.asarray(self.superblocks_total, jnp.int32),
+            jnp.asarray(max(0, keep_superblocks), jnp.int32))
+        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
+        self.superblocks_mapped -= got_sb
+        self.superblocks_released += got_sb
+        self.pages_mapped -= got_pg
+        return got_sb, got_pg
+
+    def map(self, n_superblocks: int) -> tuple[int, int]:
+        """Bring up to ``n_superblocks`` released superblocks back into
+        circulation (their versions were bumped at release, so no stale
+        snapshot survives the cycle).  Returns ``(n_superblocks,
+        n_pages)`` and updates the anchor mirrors."""
+        if n_superblocks <= 0 or self.superblocks_mapped >= self.superblocks_total:
+            return 0, 0
+        self.state, n_sb, n_pg = map_superblocks(
+            self.state, jnp.asarray(n_superblocks, jnp.int32))
+        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
+        self.superblocks_mapped += got_sb
+        self.superblocks_remapped += got_sb
+        self.pages_mapped += got_pg
+        return got_sb, got_pg
+
+    def snapshot(self, pages):
+        """Versions of ``pages`` (−1 reads as 0) as a device array — the OA
+        reader's LocalClock; no host transfer."""
+        return snapshot_versions(self.state, jnp.asarray(pages, jnp.int32))
+
+    def view(self) -> AllocatorView:
+        """Anchor introspection from the host mirrors (no device sync)."""
+        return AllocatorView(
+            superblocks_total=self.superblocks_total,
+            superblocks_mapped=self.superblocks_mapped,
+            superblocks_released=self.superblocks_released,
+            superblocks_remapped=self.superblocks_remapped,
+            pages_mapped=self.pages_mapped,
+            pages_per_superblock=self.pages_per_superblock,
+            release_strategy=self.release_strategy.value,
+        )
 
 
 def gather_kv(kv, block_table, max_len: int):

@@ -6,7 +6,18 @@ warnings (pool clock) — under a configurable memory budget.  With
 ``--prefix-cache`` the requests share a common system prompt
 (``--shared-prefix`` tokens long) and the engine's refcounted prefix index
 serves it: later admissions skip prefill for the shared pages and the
-sharing counters (hits / tokens reused / COW copies) are reported.
+sharing counters (hits / tokens reused / COW copies) are reported.  With
+``--replicas N`` the workload runs data-parallel across N independent
+pool+runner replicas (one per jax device, cycling) behind the prefix-affine
+router, and the aggregated fleet counters are reported.
+
+Capacity note: ``max_pages_per_seq`` is derived from the ACTUAL prompt
+length through ``repro.serving.required_pages_per_seq`` — the worst-case
+block-table demand the scheduler exposes.  The old CLI-side arithmetic
+under-provisioned when ``--shared-prefix`` exceeded ``--prompt-len`` (the
+real prompt is ``shared + tail``, longer than ``--prompt-len``), making
+``submit`` reject the workload; regression-tested in
+``tests/test_examples.py``.
 """
 
 from __future__ import annotations
@@ -18,7 +29,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serving import PagedServingEngine
+from repro.serving import (DataParallelEngine, PagedServingEngine,
+                           required_pages_per_seq)
 
 
 def main(argv: list[str] | None = None):
@@ -37,6 +49,9 @@ def main(argv: list[str] | None = None):
                     help="enable refcounted prompt-prefix sharing")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt common to every request")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel pool+runner replicas (1 = single "
+                         "engine; N>1 routes by prefix affinity + pressure)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -46,30 +61,39 @@ def main(argv: list[str] | None = None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    eng = PagedServingEngine(
-        cfg, params, num_pages=args.num_pages, page_size=args.page_size,
-        max_batch=args.max_batch,
-        max_pages_per_seq=(args.prompt_len + args.max_new) // args.page_size + 2,
-        prefix_cache=args.prefix_cache,
-    )
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab, (args.shared_prefix,)).tolist()
     tail_len = max(1, args.prompt_len - args.shared_prefix)
-    reqs = [
-        eng.submit(shared + rng.integers(0, cfg.vocab, (tail_len,)).tolist(),
-                   args.max_new)
-        for _ in range(args.requests)
-    ]
+    prompts = [shared + rng.integers(0, cfg.vocab, (tail_len,)).tolist()
+               for _ in range(args.requests)]
+    # worst-case per-slot demand from the scheduler's own arithmetic — the
+    # REAL prompt length (shared + tail) can exceed --prompt-len
+    max_prompt = max(len(p) for p in prompts)
+    pages_per_seq = required_pages_per_seq(max_prompt, args.max_new,
+                                           args.page_size)
+
+    engine_kw = dict(
+        num_pages=args.num_pages, page_size=args.page_size,
+        max_batch=args.max_batch, max_pages_per_seq=pages_per_seq,
+        prefix_cache=args.prefix_cache,
+    )
+    if args.replicas > 1:
+        eng = DataParallelEngine(cfg, params, replicas=args.replicas,
+                                 **engine_kw)
+    else:
+        eng = PagedServingEngine(cfg, params, **engine_kw)
+    reqs = [eng.submit(p, args.max_new) for p in prompts]
     stats = eng.run()
     done = sum(r.state == "finished" for r in reqs)
-    print(f"[serve] finished {done}/{len(reqs)} requests in {stats.steps} steps "
+    label = (f"[serve x{args.replicas}]" if args.replicas > 1 else "[serve]")
+    print(f"{label} finished {done}/{len(reqs)} requests in {stats.steps} steps "
           f"({stats.wall_seconds:.2f}s, "
           f"{stats.tokens_committed / stats.wall_seconds:.1f} tok/s)")
-    print(f"[serve] OA counters: warnings={stats.warnings_fired} "
+    print(f"{label} OA counters: warnings={stats.warnings_fired} "
           f"preemptions={stats.preemptions} reader_restarts={stats.reader_restarts} "
           f"pages_reclaimed={stats.pages_reclaimed}")
     if args.prefix_cache:
-        print(f"[serve] prefix sharing: hits={stats.prefix_hits} "
+        print(f"{label} prefix sharing: hits={stats.prefix_hits} "
               f"tokens_reused={stats.prefix_tokens_reused} "
               f"cow_copies={stats.cow_copies} "
               f"pages_allocated={stats.pages_allocated} "

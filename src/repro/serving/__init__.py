@@ -1,9 +1,18 @@
-"""Continuous-batching LM serving on the refcounted, versioned page pool:
-the engine (scheduling, prefix sharing, physical release) and the fused
-sync-free decode step."""
+"""Continuous-batching LM serving on the refcounted, versioned page pool —
+a layered stack (scheduler policy / kv-manager mechanics / fused runner)
+behind the ``PagedServingEngine`` facade, with data-parallel multi-pool
+serving on top (``DataParallelEngine``)."""
 
-from .engine import PagedServingEngine, Request, EngineStats
+from .engine import PagedServingEngine
+from .kv_manager import DeviceStepState, KVCacheManager
 from .paged_decode import paged_decode_step, fused_decode_step, kv_storage_init
+from .parallel import DataParallelEngine
+from .runner import ModelRunner, StepResult
+from .scheduler import PrefixIndex, Request, Scheduler, required_pages_per_seq
+from .stats import EngineStats, aggregate_stats
 
-__all__ = ["PagedServingEngine", "Request", "EngineStats",
+__all__ = ["PagedServingEngine", "DataParallelEngine", "Request",
+           "EngineStats", "aggregate_stats", "Scheduler", "PrefixIndex",
+           "KVCacheManager", "DeviceStepState", "ModelRunner", "StepResult",
+           "required_pages_per_seq",
            "paged_decode_step", "fused_decode_step", "kv_storage_init"]

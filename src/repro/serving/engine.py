@@ -1,1139 +1,247 @@
-"""Continuous-batching serving engine on the versioned superblock page pool.
+"""PagedServingEngine: the thin facade over the layered serving stack.
 
-The OA story end-to-end (DESIGN.md §2):
+The engine used to be a 1,139-line monolith; it is now wiring plus
+delegation over three modules with explicit contracts (ARCHITECTURE.md has
+the diagram, ``tests/test_layering.py`` pins every arrow):
 
-- **palloc**: KV storage is allocated once; freed pages stay readable.
-- **retire/free**: when a request finishes — or is PREEMPTED under memory
-  pressure — its pages are freed *optimistically*: versions bump and the
-  pages become allocatable immediately, without fencing against the decode
-  step that may still be reading them.
-- **optimistic access**: every slot carries a persistent device-side version
-  snapshot taken when its pages were granted; each fused step validates the
-  current versions against it and discards rows whose pages were reclaimed
-  in between (the request restarts from its last committed state), exactly
-  the OA read protocol.
-- **hazard pointers**: pages a step *writes* (the append slot) belong to
-  requests pinned in the running batch — the scheduler never frees those,
-  which is the structural analogue of protect-then-validate-then-CAS.
-- **physical release** (paper §3.2, device edition): the pool is superblock-
-  structured; when whole superblocks fall EMPTY the engine can take them out
-  of circulation (``shrink()`` / the quiescence policy below) and bring them
-  back under admission pressure instead of preempting — the elastic arena
-  that lets the device hand KV memory between workloads.
-- **refcounted prefix sharing** (the hybrid-system claim, applied): with
-  ``prefix_cache=True`` the engine keeps a host-side index from token-block
-  prefixes to resident KV pages.  Admission matches a new request's prompt
-  against it and grants the matching pages SHARED (refcount += 1, no copy,
-  no prefill for the covered tokens); a request finishing donates its
-  committed pages into the index instead of freeing them.  Shared pages are
-  copy-on-write: a divergent write (the only possible one is into a
-  partially-matched tail page) triggers a batched page copy + reference
-  drop inside ``fused_decode_step``'s alloc path.  Preemption and finish
-  decref instead of free — a page returns to the free list (version bump,
-  clock tick: the OA warning) only on the refcount ZERO-transition, so
-  sharing composes with optimistic access for free: holders' snapshots stay
-  valid exactly as long as they hold a reference.
+- :class:`repro.serving.scheduler.Scheduler` — continuous-batching POLICY
+  (admission, Sarathi budgets, AIMD backoff, victims, prefix index,
+  quiescence release).  Pure host logic; imports no jax.
+- :class:`repro.serving.kv_manager.KVCacheManager` — page/refcount/
+  superblock MECHANICS and host mirrors; the only layer that talks to the
+  allocator (:class:`repro.core.pagepool.DevicePagePool`, one
+  implementation of the unified ``core.allocator`` protocol).
+- :class:`repro.serving.runner.ModelRunner` — the fused-dispatch EXECUTOR
+  owning the ``fused_decode_step`` executables and the one-``device_get``-
+  per-step invariant (tests/test_sync_free.py).
 
-Hot-path contract (the point of this engine): block tables, lengths, the
-prompt buffer, the OA snapshot and the free pool are persistent DEVICE
-arrays updated functionally by ``fused_decode_step``; a steady-state step
-performs exactly ONE host transfer ([B] tokens + [B] valid + [B] grant-info
-+ [B] cow + [B] advanced-token counts in a single ``device_get``).  The
-Python scheduler touches host state only on admission, preemption,
-completion and explicit pool maintenance (shrink/remap) — the same
-amortization the paper applies to reclamation (validate once per batch, not
-once per page).
-
-**Chunked prefill** (``prefill_chunk=C > 1``) extends the same contract to
-prompt replay: rows still prefilling consume up to C prompt tokens per
-dispatch (one multi-page grant, one KV append, one chunked attention pass,
-one OA validation for the whole chunk) while decoding rows take their
-single token in the SAME step — the mixed batch.  The scheduler holds a
-Sarathi-style ``token_budget`` across the batch: decoding rows reserve one
-token each and the remainder is split across prefilling rows via a traced
-scalar, so the chunk size adapts per step without recompiling.  Pure-decode
-steps dispatch the classic C=1 executable — steady-state decode pays
-nothing for the feature.  Prefix-cache misses prefill in chunks too; the
-COW/refcount semantics are unchanged (a chunk's first written page may be
-shared — it is diverged in the same fused grant).
-
-Release / remap knobs (all host-side; the hot path never syncs for them):
-
-- ``pages_per_superblock``: pool granularity (LRMalloc superblock size).
-- ``release_strategy``: the shared ``core.vm.ReleaseStrategy`` vocabulary.
-  ``KEEP`` disables physical release (the paper's portable baseline: frames
-  stay with the process); ``MADVISE``/``SHARED_REMAP`` enable it — on the
-  device model both mean "take EMPTY superblocks out of circulation,
-  versions bumped" (the analogue of dropping frames while the range stays
-  readable).
-- ``release_quiescence``: after this many consecutive maintenance ticks with
-  no admission pressure, EMPTY superblocks above the floor are released
-  (``None`` = only explicit ``shrink()`` calls release).
-- ``min_mapped_superblocks``: floor of mapped superblocks a release keeps.
-- ``prefix_cache`` / ``prefix_cache_pages``: enable prefix sharing and cap
-  how many pages the donation index may pin (default: half the pool).
-  Under pressure the cache is evicted BEFORE any running request is
-  preempted; eviction is the same optimistic reclamation as everything
-  else (``unshare_pages``: version bump on the zero-transition).
-- ``prefill_chunk`` / ``token_budget``: chunked prefill (see above) and the
-  Sarathi-style per-step token cap; a starved multi-page grant halves an
-  AIMD budget cap toward token-at-a-time, clean chunked steps double it
-  back.
-
-Counters mirror the paper's: warnings fired (pool clock), reader restarts,
-preemptions, reclaimed pages, superblocks released/remapped, mapped pages —
-plus the sharing layer's: pages allocated, prefix hits/tokens reused, COW
-copies, cache pages pinned, evictions.
+The OA story those layers implement end-to-end is unchanged — optimistic
+free with version validation, hazard-pointer-style write pinning, physical
+superblock release, refcounted prefix sharing with fused COW, chunked
+prefill — see each module's docstring and PERF.md.  Data-parallel
+multi-pool serving stacks N of these engines behind one router
+(``serving/parallel.py``); each replica is exactly this facade.  The
+historical surface (``submit/step/run/shrink``, ``pool``, ``kv``,
+``queue``, ``_admit`` …) delegates to the layer that now owns it.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import itertools
+import contextlib
 import time
-from collections import deque
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import pagepool as pp
-from repro.core.vm import ReleaseStrategy, superblock_floor
-from .paged_decode import fused_decode_step, kv_storage_init
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int
-    generated: list[int] = dataclasses.field(default_factory=list)
-    committed: int = 0  # tokens (prompt+generated) whose KV is committed
-    restarts: int = 0
-    state: str = "queued"  # queued | running | finished
-    # time-to-first-token accounting (chunked prefill's headline metric)
-    submitted_at: float = 0.0  # wall clock at submit()
-    admitted_step: int | None = None  # engine step count at FIRST admission
-    first_token_at: float | None = None  # wall clock at first generated token
-    first_token_step: int | None = None  # engine step that produced it
-    slot: int | None = None  # batch row while running
-    pages_held: int = 0  # host-side page COUNT (ids live on device)
-    externally_reclaimed: bool = False  # a reclaimer raced us and owns the pages
-    reclaim_watermark: int = 0  # pages_held at the moment of the race
-    # prefix sharing: block-table index -> shared page id (host mirror of the
-    # refcounted grants; shrinks as COW divergence converts shares to owns)
-    shared_chain: dict = dataclasses.field(default_factory=dict)
-    shared_held: int = 0  # how many of pages_held are shared (refcount > 1)
-    prefix_reused: int = 0  # prompt tokens whose prefill this request skipped
-    _engine: "PagedServingEngine | None" = dataclasses.field(
-        default=None, repr=False, compare=False)
-
-    @property
-    def target_len(self) -> int:
-        """Final sequence length (prompt + full generation budget)."""
-        return len(self.prompt) + self.max_new_tokens
-
-    @property
-    def ttft_seconds(self) -> float | None:
-        """Submit → first generated token wall time (None until it lands)."""
-        if self.first_token_at is None:
-            return None
-        return self.first_token_at - self.submitted_at
-
-    @property
-    def ttft_steps(self) -> int | None:
-        """Engine dispatches between FIRST admission and the first generated
-        token (inclusive) — the structural TTFT chunked prefill shrinks: a
-        P-token prompt takes ~ceil(P/C) dispatches instead of P.  Like
-        ``ttft_seconds``, a preemption restart does NOT reset the clock:
-        the dispatches a restart replays are part of the latency the user
-        saw."""
-        if self.first_token_step is None or self.admitted_step is None:
-            return None
-        return self.first_token_step - self.admitted_step
-
-    @property
-    def pages(self) -> list[int]:
-        """Physical page ids currently mapped (reads the device block table —
-        introspection/test helper, never called on the hot path).
-
-        Robust against cleared slots: a request whose slot was released
-        (finish/preempt) — or whose old slot index now belongs to ANOTHER
-        request — reads as ``[]``, never a foreign or cleared block-table
-        row.  The row is materialised as a host copy and ownership is
-        re-checked after the device read, so a clear landing during the
-        transfer is detected; a consistent pre-clear snapshot may still be
-        returned, which is the strongest guarantee an unfenced observer of
-        an optimistic structure can have (the OA reader story again).
-        """
-        eng, slot = self._engine, self.slot
-        if slot is None or eng is None or eng._slots[slot] is not self:
-            return []
-        row = np.asarray(eng._bt)[slot]
-        if self.slot != slot or eng._slots[slot] is not self:
-            return []  # cleared mid-read: stale row, report nothing
-        return [int(p) for p in row if p >= 0]
-
-
-@dataclasses.dataclass
-class EngineStats:
-    steps: int = 0
-    tokens_committed: int = 0
-    preemptions: int = 0
-    reader_restarts: int = 0
-    warnings_fired: int = 0
-    pages_reclaimed: int = 0
-    wall_seconds: float = 0.0
-    tokens_per_second: float = 0.0
-    # superblock / physical-release accounting (paper §3.2, device edition)
-    superblocks_resident: int = 0  # arena footprint (constant: palloc'd once)
-    superblocks_mapped: int = 0  # currently in circulation
-    superblocks_released: int = 0  # cumulative releases
-    superblocks_remapped: int = 0  # cumulative remaps under pressure
-    mapped_pages: int = 0  # current allocatable capacity (free + held)
-    release_strategy: str = ReleaseStrategy.KEEP.value
-    # prefix-sharing / refcount accounting
-    pages_allocated: int = 0  # cumulative device page grants (incl. COW copies)
-    prefix_hits: int = 0  # admissions that matched a resident prefix
-    prefix_tokens_reused: int = 0  # prompt tokens granted without prefill
-    cow_copies: int = 0  # divergent writes resolved by a fused page copy
-    prefix_cache_pages: int = 0  # pages currently pinned by the donation index
-    prefix_evictions: int = 0  # cache entries evicted (pressure or cap)
-    # chunked-prefill / TTFT accounting (per-request detail on Request)
-    ttft_requests: int = 0  # requests that produced a first token
-    mean_ttft_steps: float = 0.0  # mean dispatches admission -> first token
-    mean_ttft_seconds: float = 0.0  # mean submit -> first token wall time
-    chunked_steps: int = 0  # steps dispatched with a chunk axis (C > 1)
-    prefill_tokens_chunked: int = 0  # prompt tokens committed by those steps
-
-
-# -- jitted slot transitions (admission / release; no host syncs) -----------
-
-
-@functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
-def _admit_slot(pool, bt, snap, lengths, last, active, pbuf, plen,
-                slot, row_pages, fresh_page, fresh_idx, start_len,
-                prompt_row, prompt_n):
-    """Install a slot's block-table row (shared prefix pages + optionally one
-    freshly allocated page at ``fresh_idx``; ``fresh_idx < 0`` = none) and
-    snapshot the CURRENT versions of every mapped page — the OA baseline the
-    fused step validates against.  ``start_len`` is the committed length the
-    shared prefix grants for free (0 without a match)."""
-    M = bt.shape[1]
-    row = jnp.where(jnp.arange(M) == fresh_idx, fresh_page, row_pages)
-    bt = bt.at[slot].set(row)
-    vers = jnp.where(row >= 0, pool.page_version[jnp.maximum(row, 0)],
-                     jnp.zeros((M,), jnp.uint32))
-    snap = snap.at[slot].set(vers.astype(jnp.uint32))
-    lengths = lengths.at[slot].set(start_len)
-    last = last.at[slot].set(0)
-    active = active.at[slot].set(True)
-    pbuf = pbuf.at[slot].set(prompt_row)
-    plen = plen.at[slot].set(prompt_n)
-    return bt, snap, lengths, last, active, pbuf, plen
-
-
-def _clear_slot_impl(bt, snap, lengths, last, active, slot):
-    bt = bt.at[slot].set(-1)
-    snap = snap.at[slot].set(0)
-    lengths = lengths.at[slot].set(0)
-    last = last.at[slot].set(0)
-    active = active.at[slot].set(False)
-    return bt, snap, lengths, last, active
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
-def _clear_slot(bt, snap, lengths, last, active, slot):
-    """Discard a slot WITHOUT freeing its pages (the racing reclaimer that
-    invalidated the slot owns them — freeing again would double-push)."""
-    return _clear_slot_impl(bt, snap, lengths, last, active, slot)
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
-def _release_slot(pool, bt, snap, lengths, last, active, slot):
-    """OPTIMISTIC free of one slot's pages: versions bump, clock ticks once,
-    the slot is cleared — all device-side, no host round trip."""
-    pool = pp._free_pages_impl(pool, bt[slot])
-    return (pool,) + _clear_slot_impl(bt, snap, lengths, last, active, slot)
+from repro.core.pagepool import DEFAULT_PAGES_PER_SUPERBLOCK, DevicePagePool
+from repro.core.vm import ReleaseStrategy
+from .kv_manager import KVCacheManager
+from .paged_decode import kv_storage_init
+from .runner import ModelRunner
+from .scheduler import Request, Scheduler  # noqa: F401  (re-export)
+from .stats import EngineStats
 
 
 class PagedServingEngine:
+    """Continuous-batching LM serving on the refcounted, versioned page pool
+    (module docstring; knobs match the historical constructor)."""
+
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int = 8, max_pages_per_seq: int | None = None,
                  attn_impl: str = "ref", greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
                  pages_per_compute_block: int = 1,
-                 pages_per_superblock: int = pp.DEFAULT_PAGES_PER_SUPERBLOCK,
+                 pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK,
                  release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
                  release_quiescence: int | None = None,
                  min_mapped_superblocks: int = 1,
                  prefix_cache: bool = False,
                  prefix_cache_pages: int | None = None,
                  prefill_chunk: int = 1,
-                 token_budget: int | None = None):
+                 token_budget: int | None = None,
+                 device=None):
         self.cfg = cfg
-        self.params = params
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_batch = max_batch
-        self.attn_impl = attn_impl
-        self.pages_per_compute_block = pages_per_compute_block
-        # chunked prefill: prompts replay up to ``prefill_chunk`` tokens per
-        # dispatch (1 = token-at-a-time).  ``token_budget`` caps the TOTAL
-        # tokens a mixed step may process (Sarathi-style): decoding rows
-        # reserve 1 each, the remainder is split across prefilling rows —
-        # realized on device through the traced ``chunk_budget`` scalar, so
-        # the budget adapts per step without recompiling.
-        self.prefill_chunk = max(1, int(prefill_chunk))
-        self.token_budget = token_budget
-        # AIMD backoff of the chunk budget under memory pressure: a starved
-        # multi-page chunk grant halves the cap (floor 1 — token-at-a-time,
-        # whose one-page-per-row-per-step demand the preemption machinery is
-        # proven against), a starvation-free chunked step doubles it back.
-        self._chunk_budget_cap = self.prefill_chunk
-        # resident device scalar for the C=1 executable, where the budget is
-        # clipped to 1 anyway: pure-decode steps must not pay a per-step
-        # host->device upload for a value that cannot matter
-        self._budget_one = jnp.asarray(1, jnp.int32)
-        self.pool = pp.pool_init(num_pages, pages_per_superblock)
-        self.pages_per_superblock = self.pool.pages_per_superblock
-        self.release_strategy = release_strategy
-        self.release_quiescence = release_quiescence
-        self.min_mapped_superblocks = max(1, min_mapped_superblocks)
-        self.kv = kv_storage_init(cfg, num_pages, page_size)
-        self.max_pages_per_seq = max_pages_per_seq or num_pages
-        self.queue: deque[Request] = deque()
-        self.running: list[Request] = []
-        self.stats = EngineStats()
-        self.greedy = greedy
-        self._temperature = jnp.asarray(temperature, jnp.float32)
-        self._base_key = jax.random.PRNGKey(seed)
-        self._step_idx = 0
-        self._next_rid = itertools.count(1000)
-        self._warning_batches = 0  # host mirror of pool.clock (no sync)
-        self._idle_ticks = 0  # consecutive maintenance ticks with no pressure
-        self._ttft_steps_total = 0  # running sums behind the EngineStats means
-        self._ttft_seconds_total = 0.0
+        self.device = device
+        ctx = (jax.default_device(device) if device is not None
+               else contextlib.nullcontext())
+        with ctx:
+            self.params = (jax.device_put(params, device)
+                           if device is not None else params)
+            self.stats = EngineStats()
+            allocator = DevicePagePool(num_pages, pages_per_superblock,
+                                       release_strategy)
+            self.stats.record_superblocks(allocator.view())
+            self.kv_manager = KVCacheManager(
+                allocator, kv=kv_storage_init(cfg, num_pages, page_size),
+                max_batch=max_batch,
+                max_pages_per_seq=max_pages_per_seq or num_pages,
+                page_size=page_size, stats=self.stats)
+            self.runner = ModelRunner(
+                cfg, self.params, attn_impl=attn_impl, greedy=greedy,
+                temperature=temperature, seed=seed,
+                pages_per_compute_block=pages_per_compute_block)
+            self.scheduler = Scheduler(
+                self.kv_manager, self.stats, num_pages=num_pages,
+                page_size=page_size, max_batch=max_batch,
+                prefix_cache=prefix_cache,
+                prefix_cache_pages=prefix_cache_pages,
+                prefill_chunk=prefill_chunk, token_budget=token_budget,
+                release_quiescence=release_quiescence,
+                min_mapped_superblocks=min_mapped_superblocks, engine=self)
 
-        # prefix-sharing host mirrors.  The index maps an exact token tuple
-        # (length a multiple of page_size) to the device page holding that
-        # tuple's LAST page_size tokens; a chain of k pages is recovered by
-        # looking up the k aligned prefixes.  The tail map holds one
-        # partially-filled page per aligned prefix for sub-page matching
-        # (the COW case).  The index owns ONE device reference per page;
-        # ``_sharers`` counts additional references held by running slots.
-        self.prefix_cache = prefix_cache
-        self._prefix_cache_cap = (max(1, num_pages // 2)
-                                  if prefix_cache_pages is None
-                                  else max(1, prefix_cache_pages))
-        self._prefix_index: dict[tuple, int] = {}
-        self._prefix_tail: dict[tuple, tuple[int, tuple]] = {}
-        self._cache_pages: dict[int, tuple] = {}  # page -> ("page"|"tail", key)
-        self._sharers: dict[int, int] = {}  # page -> live slot references
+    # -- scheduling (delegates to the policy layer) --------------------------
 
-        # host mirrors of the superblock anchors (updated only at the
-        # shrink/remap sync points, so the hot path stays transfer-free)
-        self._total_sbs = self.pool.num_superblocks
-        self._mapped_sbs = self._total_sbs
-        self._mapped_pages = num_pages
-        self.stats.superblocks_resident = self._total_sbs
-        self.stats.release_strategy = release_strategy.value
-        self._sync_sb_stats()
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        """Queue a request (host-only; rejects over-capacity prompts)."""
+        return self.scheduler.submit(prompt, max_new_tokens)
 
-        # persistent device-side batch state
-        B, M = max_batch, self.max_pages_per_seq
-        self._bt = jnp.full((B, M), -1, jnp.int32)
-        self._snap = jnp.zeros((B, M), jnp.uint32)
-        self._len = jnp.zeros((B,), jnp.int32)
-        self._last = jnp.zeros((B,), jnp.int32)
-        self._active = jnp.zeros((B,), bool)
-        self._prompt_cap = 16
-        self._pbuf = jnp.zeros((B, self._prompt_cap), jnp.int32)
-        self._plen = jnp.zeros((B,), jnp.int32)
-        self._slots: list[Request | None] = [None] * B
+    def step(self, *, inject_preemption_of: Request | None = None) -> None:
+        """One batched decode/prefill step: the scheduler plans the chunk,
+        the runner executes ONE fused dispatch with ONE ``device_get``, the
+        scheduler absorbs the results.  ``inject_preemption_of`` preempts
+        that request after launch but before its results are consumed (the
+        scheduler-overlap race; tests)."""
+        if not self.scheduler.running:
+            return
+        C, budget = self.scheduler.plan_chunk()
+        res = self.runner.execute(self.kv_manager, chunk_size=C, budget=budget)
+        self.scheduler.absorb(res, C, budget, inject_preemption_of)
 
-    # -- page accounting --------------------------------------------------------
+    def launch_step(self):
+        """Dispatch one step WITHOUT collecting its host transfer; returns a
+        pending handle for :meth:`collect_step` (None when idle).  The
+        data-parallel front end launches every replica before blocking on
+        any — jax dispatch is async, so the fused steps overlap."""
+        if not self.scheduler.running:
+            return None
+        C, budget = self.scheduler.plan_chunk()
+        return (self.runner.launch(self.kv_manager, chunk_size=C,
+                                   budget=budget), C, budget)
 
-    def _sync_sb_stats(self) -> None:
-        """Refresh the EngineStats superblock mirrors (host-side only)."""
-        self.stats.superblocks_mapped = self._mapped_sbs
-        self.stats.mapped_pages = self._mapped_pages
+    def collect_step(self, handle) -> None:
+        """Collect a :meth:`launch_step` handle: the single ``device_get``,
+        then the scheduler absorbs the results."""
+        if handle is not None:
+            pending, C, budget = handle
+            self.scheduler.absorb(self.runner.collect(pending), C, budget)
 
-    def _distinct_pages_in_use(self) -> int:
-        """Distinct live pages (each shared page counted ONCE — the release
-        floor and the admission guard must not double-bill sharers)."""
-        owned = sum(r.pages_held - r.shared_held for r in self.running)
-        shared = set(self._cache_pages)
-        shared.update(self._sharers)
-        return owned + len(shared)
-
-    # -- prefix sharing: match / share / donate / evict -------------------------
-
-    def _dec_sharer(self, page: int) -> None:
-        c = self._sharers.get(page, 0)
-        if c <= 1:
-            self._sharers.pop(page, None)
-        else:
-            self._sharers[page] = c - 1
-
-    def _match_prefix(self, prompt: list[int]):
-        """Longest resident prefix of ``prompt``: (m, chain, tail_page).
-
-        ``chain`` holds page ids for the first ``m // page_size`` fully
-        matched pages; ``tail_page`` (−1 = none) extends the match by
-        ``m % page_size`` tokens into a partially matching page (granted
-        copy-on-write: the new request's first write diverges it).  ``m`` is
-        capped at ``len(prompt) − 1`` — the last prompt token is always
-        recomputed, because its forward pass produces the first generated
-        token.  Host-side dictionary walk only: no device work."""
-        if not self.prefix_cache:
-            return 0, [], -1
-        ps = self.page_size
-        chain: list[int] = []
-        k = 0
-        while (k + 1) * ps <= len(prompt):
-            page = self._prefix_index.get(tuple(prompt[: (k + 1) * ps]))
-            if page is None:
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        """Drive admit/step/maintain until the queue drains (or max_steps);
+        host work only at the allowed sync points."""
+        t0 = time.time()
+        for _ in range(max_steps):
+            self.scheduler.admit()
+            if not self.scheduler.running and not self.scheduler.queue:
                 break
-            chain.append(page)
-            k += 1
-        extra, tail_page = 0, -1
-        tail = self._prefix_tail.get(tuple(prompt[: k * ps]))
-        if tail is not None:
-            tp, ttoks = tail
-            rest = prompt[k * ps:]
-            while (extra < len(ttoks) and extra < len(rest)
-                   and ttoks[extra] == rest[extra]):
-                extra += 1
-            tail_page = tp if extra > 0 else -1
-        m = k * ps + extra
-        if m >= len(prompt):  # never grant the full prompt (see docstring)
-            m = len(prompt) - 1
-            k2, extra = divmod(m, ps)
-            if k2 < k:
-                tail_page = chain[k2] if extra > 0 else -1
-                chain = chain[:k2]
-            elif extra == 0:
-                tail_page = -1
-        if m <= 0:
-            return 0, [], -1
-        return m, chain, (tail_page if m % ps else -1)
+            if not self.scheduler.running:  # queue blocked on memory
+                raise MemoryError("pool exhausted with empty running set")
+            self.step()
+            self.scheduler.maintain()
+        if self.scheduler.release_quiescence is not None:
+            self.shrink()  # drain: park the now-idle superblocks
+        self.stats.record_wall(time.time() - t0)
+        return self.stats
 
-    def _drop_slot_ref(self, page: int, shared_ids: set, to_unshare: list) -> bool:
-        """Queue the slot's reference on ``page`` for a device unshare and
-        update the sharer mirror.  Returns True iff that drop is the
-        zero-transition (the page actually frees)."""
-        to_unshare.append(page)
-        if page in shared_ids:
-            frees = (self._sharers.get(page, 0) == 1
-                     and page not in self._cache_pages)
-            self._dec_sharer(page)
-            return frees
-        return page not in self._cache_pages  # owned: refcount 1 -> 0
+    def shrink(self, keep_superblocks: int | None = None) -> int:
+        """Release every EMPTY superblock above the floor (maintenance sync
+        point); returns the number released.  No-op under ``KEEP``."""
+        return self.scheduler.shrink(keep_superblocks)
 
-    def _donate_slot(self, req: Request) -> None:
-        """Finish-path release: donate the request's committed pages to the
-        prefix index (references TRANSFER — no device op, no version bump)
-        and unshare whatever the index does not take.  Reads the slot's
-        block-table row from the device — finish is an allowed sync point.
-        """
-        slot = req.slot
-        ps = self.page_size
-        row = [int(p) for p in np.asarray(jax.device_get(self._bt[slot]))]
-        seq = req.prompt + req.generated
-        k_full, t_extra = divmod(req.committed, ps)
-        shared_ids = set(req.shared_chain.values())
-        to_unshare: list[int] = []
-        freed = 0
-        covered = k_full + (1 if t_extra else 0)
-        for j in range(covered):
-            page = row[j]
-            if page < 0:  # defensive: a committed position must be mapped
-                continue
-            if j < k_full:
-                key = tuple(seq[: (j + 1) * ps])
-                existing = self._prefix_index.get(key)
-                if existing == page:
-                    # already indexed (we shared it at admission): drop the
-                    # slot's extra reference, the index keeps its own
-                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
-                elif existing is None and page not in self._cache_pages:
-                    self._prefix_index[key] = page
-                    self._cache_pages[page] = ("page", key)
-                    if page in shared_ids:
-                        self._dec_sharer(page)  # sharer ref becomes the
-                        # index's ref — refcount unchanged, no device op
-                else:
-                    # same content already cached under a different page:
-                    # keep the cache's copy, drop ours
-                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
-            else:  # the partially filled tail page (always owned: any shared
-                # tail was COW-diverged by this request's first write)
-                key = tuple(seq[: k_full * ps])
-                ttoks = tuple(seq[k_full * ps: req.committed])
-                if (key in self._prefix_tail or page in self._cache_pages
-                        or not ttoks):
-                    freed += self._drop_slot_ref(page, shared_ids, to_unshare)
-                else:
-                    self._prefix_tail[key] = (page, ttoks)
-                    self._cache_pages[page] = ("tail", key)
-                    if page in shared_ids:
-                        self._dec_sharer(page)
-        for j in range(covered, len(row)):  # uncommitted growth grants
-            if row[j] >= 0:
-                freed += self._drop_slot_ref(row[j], shared_ids, to_unshare)
-        if to_unshare:
-            self.pool = pp.unshare_pages(
-                self.pool, jnp.asarray(to_unshare, jnp.int32))
-            if freed:  # the device clock ticks only on a zero-transition
-                self._warning_batches += 1
-                self.stats.warnings_fired = self._warning_batches
-            self.stats.pages_reclaimed += freed
-        (self._bt, self._snap, self._len, self._last,
-         self._active) = _clear_slot(
-            self._bt, self._snap, self._len, self._last, self._active,
-            req.slot)
-        self.stats.prefix_cache_pages = len(self._cache_pages)
-        self._enforce_cache_cap()
+    def inject_external_reclaim(self, req: Request) -> None:
+        """TEST/RACE HOOK — a reclaimer races the decode loop (see
+        :meth:`Scheduler.inject_external_reclaim`)."""
+        self.scheduler.inject_external_reclaim(req)
+
+    # -- historical introspection surface (tests, examples, benchmarks) ------
+
+    @property
+    def pool(self):
+        """The device pool pytree (the allocator's threaded state)."""
+        return self.kv_manager.allocator.state
+
+    @pool.setter
+    def pool(self, state):
+        """Install an externally transformed pool pytree (tests)."""
+        self.kv_manager.allocator.state = state
+
+    @property
+    def kv(self):
+        """The paged KV arena ({'k','v'} page arrays)."""
+        return self.kv_manager.kv
+
+    @property
+    def queue(self):
+        """Queued requests (scheduler-owned)."""
+        return self.scheduler.queue
+
+    @property
+    def running(self):
+        """Running requests (scheduler-owned)."""
+        return self.scheduler.running
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        """Block-table width per slot (kv-manager-owned)."""
+        return self.kv_manager.max_pages_per_seq
+
+    @property
+    def pages_per_superblock(self) -> int:
+        """Release granularity of the device pool."""
+        return self.kv_manager.allocator.pages_per_superblock
+
+    @property
+    def prefill_chunk(self) -> int:
+        """Configured chunked-prefill width (scheduler-owned)."""
+        return self.scheduler.prefill_chunk
+
+    @property
+    def prefix_cache(self) -> bool:
+        """Whether refcounted prefix sharing is enabled."""
+        return self.scheduler.prefix_cache
+
+    @property
+    def release_strategy(self) -> ReleaseStrategy:
+        """The pool's physical-release strategy."""
+        return self.kv_manager.allocator.release_strategy
+
+    # internal-but-stable hooks the test suites drive directly
+    _HOOKS = {
+        "_slots": lambda s: s.kv_manager.slots,
+        "_bt": lambda s: s.kv_manager._bt,
+        "_sharers": lambda s: s.kv_manager.sharers,
+        "_cache_pages": lambda s: s.scheduler.index.pages,
+        "_prefix_index": lambda s: s.scheduler.index.index,
+        "_prefix_tail": lambda s: s.scheduler.index.tail,
+        "_prompt_cap": lambda s: s.kv_manager._prompt_cap,
+        "_chunk_budget_cap": lambda s: s.scheduler.chunk_budget_cap,
+    }
+
+    def __getattr__(self, name):
+        hook = type(self)._HOOKS.get(name)
+        if hook is None:
+            raise AttributeError(name)
+        return hook(self)
+
+    @property
+    def _warning_batches(self) -> int:
+        # the clock mirror lives in stats now; tests still poke it directly
+        return self.stats.warnings_fired
+
+    @_warning_batches.setter
+    def _warning_batches(self, v: int) -> None:
+        self.stats.warnings_fired = v
+
+    def _admit(self) -> None:
+        return self.scheduler.admit()
+
+    def _preempt(self, victim: Request) -> None:
+        return self.scheduler.preempt(victim)
+
+    def _maintain(self) -> None:
+        return self.scheduler.maintain()
 
     def _evict_prefix(self, need_pages: int | None = None,
                       freeable_only: bool = True) -> int:
-        """Evict cache entries leaf-first; returns pages actually FREED.
-
-        ``need_pages``: stop once that many pages freed (None = evict down
-        to the cap).  ``freeable_only``: skip pages still referenced by a
-        running slot (dropping the index's reference would free nothing).
-        One linear sweep: tails first (always leaves), then index keys
-        deepest-first — a chain link becomes a leaf the moment its extension
-        is evicted earlier in the SAME sweep, so chains shrink from the back
-        and shorter keys stay matchable.  Donation inserts every prefix of a
-        chain, so the only possible extension of a key is the key one page
-        longer — a per-key child count replaces the quadratic extension
-        scan.  One batched ``unshare_pages`` at the end; the clock — and its
-        host mirror — tick once iff any page hit zero."""
-        ps = self.page_size
-        children: dict[tuple, int] = {}
-        for k in self._prefix_index:
-            if len(k) > ps:
-                parent = k[: len(k) - ps]
-                children[parent] = children.get(parent, 0) + 1
-        candidates = (
-            [("tail", k) for k in sorted(self._prefix_tail, key=len, reverse=True)]
-            + [("page", k) for k in sorted(self._prefix_index, key=len, reverse=True)])
-        to_unshare: list[int] = []
-        freed = 0
-        for kind, key in candidates:
-            if need_pages is not None and freed >= need_pages:
-                break
-            if need_pages is None and len(self._cache_pages) <= self._prefix_cache_cap:
-                break
-            if kind == "page" and (children.get(key, 0) > 0
-                                   or key in self._prefix_tail):
-                continue  # a longer chain link or its tail must go first
-            page = (self._prefix_tail[key][0] if kind == "tail"
-                    else self._prefix_index[key])
-            if freeable_only and self._sharers.get(page, 0) > 0:
-                continue
-            if kind == "tail":
-                self._prefix_tail.pop(key)
-            else:
-                self._prefix_index.pop(key)
-                if len(key) > ps:
-                    parent = key[: len(key) - ps]
-                    children[parent] = children.get(parent, 0) - 1
-            self._cache_pages.pop(page, None)
-            to_unshare.append(page)
-            if self._sharers.get(page, 0) == 0:
-                freed += 1
-            self.stats.prefix_evictions += 1
-        if to_unshare:
-            self.pool = pp.unshare_pages(
-                self.pool, jnp.asarray(to_unshare, jnp.int32))
-            if freed:
-                self._warning_batches += 1
-                self.stats.warnings_fired = self._warning_batches
-            self.stats.pages_reclaimed += freed
-            self.stats.prefix_cache_pages = len(self._cache_pages)
-        return freed
-
-    def _enforce_cache_cap(self) -> None:
-        if len(self._cache_pages) > self._prefix_cache_cap:
-            self._evict_prefix(need_pages=None, freeable_only=False)
-
-    def _pick_victim(self, exclude: Request | None = None):
-        cands = [r for r in self.running if r is not exclude]
-        if not cands:
-            return None
-        # youngest first (least committed work lost), like scheduler LIFO
-        return min(cands, key=lambda r: r.committed)
-
-    def _preempt(self, victim: Request) -> None:
-        """OPTIMISTIC free: pages are reclaimed immediately — any in-flight
-        read of them will fail version validation and restart."""
-        self._free_slot(victim)
-        victim.state = "queued"
-        victim.committed = 0
-        victim.generated = []  # restart from a known-valid root (the prompt)
-        victim.restarts += 1
-        self.running.remove(victim)
-        self.queue.append(victim)
-        self.stats.preemptions += 1
-
-    def _mirror_slot_release(self, req: Request) -> None:
-        """Host mirror of a whole-row device unshare: owned pages hit zero
-        (freed), shared pages lose this request's reference — a shared page
-        frees only if this was its last sharer AND the index holds no
-        reference.  The clock mirror ticks iff SOME page hit zero — exactly
-        the device's rule, so ``warnings_fired == pool.clock`` always."""
-        owned = req.pages_held - req.shared_held
-        freed_shared = sum(
-            1 for p in req.shared_chain.values()
-            if self._sharers.get(p, 0) == 1 and p not in self._cache_pages)
-        if owned > 0 or freed_shared:
-            self._warning_batches += 1
-            self.stats.warnings_fired = self._warning_batches
-        for p in req.shared_chain.values():
-            self._dec_sharer(p)
-        req.shared_chain = {}
-        req.shared_held = 0
-        self.stats.pages_reclaimed += owned + freed_shared
-
-    def _free_slot(self, req: Request, *, donate: bool = False) -> None:
-        """Release a slot's pages by DROPPING REFERENCES (``unshare``), not
-        by unconditional free: owned pages hit zero and reclaim optimistically
-        (version bump — in-flight readers fail validation and restart);
-        shared prefix pages merely lose this request's reference, so other
-        sharers and the cache keep reading them validly.  With ``donate``
-        (finish path, cache enabled) committed pages are offered to the
-        prefix index first — references transfer instead of dropping."""
-        assert req.slot is not None
-        slot = req.slot
-        if req.externally_reclaimed:
-            # the racing reclaimer owns every page it saw (freeing those
-            # again would double-push); only pages granted AFTER the race —
-            # at most one, past the watermark — are still slot-owned
-            if req.pages_held > req.reclaim_watermark:
-                self.pool = pp.free_pages(
-                    self.pool, self._bt[slot, req.reclaim_watermark:])
-                self._warning_batches += 1
-                self.stats.warnings_fired = self._warning_batches
-                self.stats.pages_reclaimed += (
-                    req.pages_held - req.reclaim_watermark)
-            (self._bt, self._snap, self._len, self._last,
-             self._active) = _clear_slot(
-                self._bt, self._snap, self._len, self._last,
-                self._active, slot)
-            req.externally_reclaimed = False
-        elif donate and self.prefix_cache and req.committed > 0:
-            self._donate_slot(req)
-        else:
-            (self.pool, self._bt, self._snap, self._len, self._last,
-             self._active) = _release_slot(
-                self.pool, self._bt, self._snap, self._len, self._last,
-                self._active, slot)
-            self._mirror_slot_release(req)
-        self._slots[slot] = None
-        req.slot = None
-        req.pages_held = 0
-        req.shared_held = 0
-        req.shared_chain = {}
-
-    # -- physical release / remap (paper §3.2 on the device pool) ---------------
-
-    def shrink(self, keep_superblocks: int | None = None) -> int:
-        """Release every EMPTY superblock above the floor from circulation.
-
-        An explicit maintenance sync point (like admission): returns the
-        number of superblocks released and updates the host mirrors.  Under
-        ``ReleaseStrategy.KEEP`` this is a no-op — the paper's portable
-        baseline recycles within the process but never releases.
-        """
-        if self.release_strategy is ReleaseStrategy.KEEP:
-            return 0
-        keep = (self.min_mapped_superblocks if keep_superblocks is None
-                else max(1, keep_superblocks))
-        self.pool, n_sb, n_pg = pp.release_empty_superblocks(
-            self.pool, jnp.asarray(self._total_sbs, jnp.int32),
-            jnp.asarray(keep, jnp.int32))
-        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
-        if got_sb > 0:
-            self._mapped_sbs -= got_sb
-            self._mapped_pages -= got_pg
-            self.stats.superblocks_released += got_sb
-            self._warning_batches += 1  # release ticks the clock once
-            self.stats.warnings_fired = self._warning_batches
-            self._sync_sb_stats()
-        return got_sb
-
-    def _remap_for(self, need_pages: int) -> bool:
-        """Bring released superblocks back into circulation to cover
-        ``need_pages`` more pages.  Returns True if any superblock was
-        remapped.  Preferred over preemption during admission: remapping
-        costs no running request anything."""
-        if self._mapped_sbs >= self._total_sbs or need_pages <= 0:
-            return False
-        want_sbs = -(-need_pages // self.pages_per_superblock)
-        self.pool, n_sb, n_pg = pp.map_superblocks(
-            self.pool, jnp.asarray(want_sbs, jnp.int32))
-        got_sb, got_pg = (int(x) for x in jax.device_get((n_sb, n_pg)))
-        if got_sb > 0:
-            self._mapped_sbs += got_sb
-            self._mapped_pages += got_pg
-            self.stats.superblocks_remapped += got_sb
-            self._sync_sb_stats()
-        return got_sb > 0
-
-    def _maintain(self) -> None:
-        """Quiescence-driven release tick (called from ``run``; an allowed
-        host sync point, never part of the fused step)."""
-        if (self.release_quiescence is None
-                or self.release_strategy is ReleaseStrategy.KEEP):
-            return
-        if self.queue:
-            self._idle_ticks = 0  # admission pressure: not quiescent
-            return
-        self._idle_ticks += 1
-        if self._idle_ticks < self.release_quiescence:
-            return
-        self._idle_ticks = 0
-        # release only capacity no running request can ever demand again, so
-        # a mid-burst shrink never ping-pongs with the growth path's remap.
-        # Shared pages count ONCE: a request's future demand excludes the
-        # prefix pages it shares, and the distinct shared set (sharers +
-        # cache) is added back a single time (vm.superblock_floor contract).
-        ps = self.page_size
-        # a row still sharing its write-position (tail) page will REPLACE it
-        # with a freshly granted copy at its first divergent write, so its
-        # true future demand is one page beyond its block-table footprint —
-        # omit that and a floor-exact shrink releases the superblock the
-        # next step's COW grant needs (shrink/remap ping-pong)
-        demand = sum((r.target_len + ps - 1) // ps - r.shared_held
-                     + (1 if (r.committed // ps) in r.shared_chain else 0)
-                     for r in self.running)
-        shared_distinct = len(set(self._cache_pages) | set(self._sharers))
-        keep = superblock_floor(demand + shared_distinct,
-                                self.pages_per_superblock,
-                                self.min_mapped_superblocks)
-        if self._mapped_sbs > keep:  # anything releasable? (host-side check)
-            self.shrink(keep_superblocks=keep)
-
-    # -- scheduling -------------------------------------------------------------
-
-    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
-        """Queue a request (host-only; no device work until admission).
-
-        Over-long requests are REJECTED here with a clear error instead of
-        being silently clamped downstream: a prompt whose replay positions
-        exceed the slot's KV capacity would otherwise hit the fused step's
-        defensive position clamp and generate garbage from the wrong
-        tokens.  (``MemoryError`` for pool-wide exhaustion still comes from
-        admission — this guard is per-slot capacity, knowable at submit.)
-        """
-        prompt = list(prompt)
-        cap_tokens = self.max_pages_per_seq * self.page_size
-        if len(prompt) + max_new_tokens > cap_tokens:
-            raise ValueError(
-                f"request needs {len(prompt)} prompt + {max_new_tokens} "
-                f"generated tokens but a slot holds at most {cap_tokens} "
-                f"(max_pages_per_seq={self.max_pages_per_seq} × "
-                f"page_size={self.page_size}); split the prompt or raise "
-                f"max_pages_per_seq")
-        req = Request(rid=next(self._next_rid), prompt=prompt,
-                      max_new_tokens=max_new_tokens, _engine=self,
-                      submitted_at=time.time())
-        self.queue.append(req)
-        return req
-
-    def _pages_needed_next_step(self, r: Request) -> int:
-        """Pages ``r``'s NEXT step will demand from the pool (host mirrors
-        only — no device sync).  A decoding row needs at most one (its write
-        position crossing into an unmapped page); a prefilling row's chunk
-        may straddle several page boundaries; a row whose write position
-        still sits in a shared page needs one more for the COW copy."""
-        ps = self.page_size
-        # the next dispatch's budget is capped by the LIVE AIMD cap (it only
-        # moves inside step()), so charging the configured prefill_chunk
-        # here would over-reserve after a backoff — needlessly evicting
-        # cache pages or refusing admissions the real demand allows
-        chunk = max(1, min(self.prefill_chunk, self._chunk_budget_cap))
-        if r.committed < len(r.prompt) and chunk > 1:
-            n_next = min(chunk, len(r.prompt) - r.committed)
-        else:
-            n_next = 1
-        last_pi = (r.committed + n_next - 1) // ps
-        need = max(0, last_pi + 1 - r.pages_held)
-        if (r.committed // ps) in r.shared_chain:
-            need += 1  # COW copy of the still-shared write page
-        return need
-
-    def _ensure_prompt_cap(self, n: int) -> None:
-        if n <= self._prompt_cap:
-            return
-        cap = self._prompt_cap
-        while cap < n:
-            cap *= 2
-        self._pbuf = jnp.pad(self._pbuf, ((0, 0), (0, cap - self._prompt_cap)))
-        self._prompt_cap = cap
-
-    def _admit(self) -> None:
-        """Admission touches host state freely (allowed sync point).
-
-        With the prefix cache on, the request's prompt is matched against
-        the resident index first: matched pages are granted SHARED (one
-        ``share_pages`` dispatch — refcount += 1, no copy, no prefill for
-        the covered tokens) and the slot starts with ``lengths`` already at
-        the match length.  A fresh page is allocated only when the first
-        write lands on a page boundary; a sub-page (tail) match defers even
-        that to the fused step's COW path."""
-        ps = self.page_size
-        while self.queue and len(self.running) < self.max_batch:
-            req = self.queue[0]
-            need_total = (req.target_len + ps - 1) // ps
-            if need_total > min(self.num_pages, self.max_pages_per_seq):
-                raise MemoryError(
-                    f"request {req.rid} needs {need_total} pages; the pool "
-                    f"can never satisfy it (num_pages={self.num_pages})")
-            m, chain, tail_page = self._match_prefix(req.prompt)
-            shared = chain + ([tail_page] if tail_page >= 0 else [])
-            # share BEFORE the alloc loop: the sharer mirror marks these
-            # pages so pressure eviction inside the loop cannot free them
-            if shared:
-                self.pool, share_ok = pp.share_pages(
-                    self.pool, jnp.asarray(shared, jnp.int32))
-                # admission is a sync point: check the device accepted every
-                # share.  ok=False means the host index named a FREE page —
-                # an index/pool desync that must fail loudly here, not
-                # surface later as two requests corrupting one KV page.
-                assert bool(share_ok), (
-                    f"prefix index named free page(s) among {shared} — "
-                    f"host cache mirrors diverged from the device pool")
-                for p in shared:
-                    self._sharers[p] = self._sharers.get(p, 0) + 1
-            need_fresh = (m % ps == 0)  # first write lands on a new page
-            pages = jnp.full((1,), -1, jnp.int32)
-            # Starvation guard — for EVERY admission: running rows that need
-            # pages THIS step have first claim on the free pool.  Without
-            # this, admission can keep stealing the page a preemption just
-            # freed for a starved row — an admit/starve/preempt livelock.
-            # (Host-side arithmetic only: the mirrors track the device
-            # anchors, so no sync.)  Shared pages count once; COW-pending
-            # rows — write position inside a still-shared page — count as
-            # needing a page, their next step allocates the copy.  A
-            # tail-match admission allocates nothing NOW but its first step
-            # demands a COW copy, so it reserves one page exactly like a
-            # fresh-page admission does.  A prefilling row consuming a
-            # C-token chunk can demand several pages in one step (the chunk
-            # straddles page boundaries) — `_pages_needed_next_step` counts
-            # them all, so chunked prefill can't sneak past the guard.
-            used = self._distinct_pages_in_use()
-            need_now = sum(self._pages_needed_next_step(r)
-                           for r in self.running)
-            # what THIS admission must reserve: the fresh page granted now
-            # plus every page the request's FIRST step will demand — with
-            # chunked prefill that first step spans up to ceil(C/page_size)
-            # pages (plus a COW copy for a tail match), so reserving just 1
-            # would let admission starve a running row on its very next
-            # grant.  Reduces to the old "reserve 1" for prefill_chunk=1.
-            n_first = min(max(1, min(self.prefill_chunk,
-                                     self._chunk_budget_cap)),
-                          len(req.prompt) - m)
-            held_after = len(shared) + (1 if need_fresh else 0)
-            first_need = max(0, (m + n_first - 1) // ps + 1 - held_after)
-            if tail_page >= 0:
-                first_need += 1  # the first step COWs the shared tail page
-            reserve = (1 if need_fresh else 0) + first_need
-            short = reserve + used + need_now - self._mapped_pages
-            if short > 0:
-                self._remap_for(short)
-                short = (reserve + self._distinct_pages_in_use() + need_now
-                         - self._mapped_pages)
-                if short > 0 and self.prefix_cache:
-                    # cache-only pages cost no running request anything:
-                    # evict them before refusing admission (a pool pinned
-                    # entirely by the index must drain via eviction, not
-                    # dead-end into "exhausted with empty running set")
-                    self._evict_prefix(short)
-                    short = (reserve + self._distinct_pages_in_use()
-                             + need_now - self._mapped_pages)
-                if short > 0:
-                    self._unshare_admission(req, shared)
-                    break  # remap + eviction fell short: a partial cover
-                    # must not let admission steal a starved row's page
-            if need_fresh:
-                ok = False
-                while True:
-                    self.pool, pages, ok = pp.alloc_pages(self.pool, 1)
-                    if bool(ok):
-                        break
-                    # released memory covers the need? remap, then evict the
-                    # prefix cache, and only then preempt a running request
-                    if self._remap_for(1):
-                        continue
-                    if self.prefix_cache and self._evict_prefix(1) > 0:
-                        continue
-                    victim = self._pick_victim(exclude=req)
-                    if victim is None:
-                        self._unshare_admission(req, shared)
-                        return  # req waits for memory
-                    self._preempt(victim)  # free pages, then retry the alloc
-            slot = self._slots.index(None)
-            self._ensure_prompt_cap(len(req.prompt))
-            prow = np.zeros((self._prompt_cap,), np.int32)
-            prow[: len(req.prompt)] = req.prompt
-            bt_row = np.full((self.max_pages_per_seq,), -1, np.int32)
-            bt_row[: len(shared)] = shared
-            fresh_idx = (m // ps) if need_fresh else -1
-            (self._bt, self._snap, self._len, self._last, self._active,
-             self._pbuf, self._plen) = _admit_slot(
-                self.pool, self._bt, self._snap, self._len, self._last,
-                self._active, self._pbuf, self._plen,
-                jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
-                pages[0], jnp.asarray(fresh_idx, jnp.int32),
-                jnp.asarray(m, jnp.int32),
-                jnp.asarray(prow), jnp.asarray(len(req.prompt), jnp.int32))
-            self.queue.popleft()
-            req.state = "running"
-            req.slot = slot
-            if req.admitted_step is None:  # restarts keep the original clock
-                req.admitted_step = self.stats.steps
-            req.committed = m
-            req.prefix_reused = m
-            req.shared_chain = dict(enumerate(shared))
-            req.shared_held = len(shared)
-            req.pages_held = len(shared) + (1 if need_fresh else 0)
-            self._slots[slot] = req
-            self.running.append(req)
-            if need_fresh:
-                self.stats.pages_allocated += 1
-            if m > 0:
-                self.stats.prefix_hits += 1
-                self.stats.prefix_tokens_reused += m
-            # a preemption above may have requeued the victim behind req;
-            # keep admitting — the loop condition re-checks capacity
-
-    def _unshare_admission(self, req: Request, shared: list[int]) -> None:
-        """Back out the shared grants of an admission that could not secure
-        its fresh page (the request stays queued).  All these pages are
-        still cache-held, so no zero-transition — no clock tick."""
-        if not shared:
-            return
-        self.pool = pp.unshare_pages(self.pool, jnp.asarray(shared, jnp.int32))
-        for p in shared:
-            self._dec_sharer(p)
-
-    def _pick_victim_and_preempt(self, starved: list[Request]) -> bool:
-        """Evict to unblock ``starved`` rows: the victim is the YOUNGEST
-        running request overall (least committed work lost).  Preempting a
-        young non-starved row frees pages for the starved; preempting a
-        young starved row withdraws its own demand — either way the MOST
-        committed row is never the victim, so the batch's leader always
-        makes progress and preemption cannot ping-pong (with chunked
-        prefill a young row can demand several pages per step, which made
-        the old prefer-non-starved policy evict an almost-finished leader
-        over and over).  Remap is tried first (released superblocks cover
-        starvation without costing any running request its work), then
-        prefix-cache eviction (cached pages cost no request anything
-        either), then preemption."""
-        if self._remap_for(len(starved)):
-            return True
-        if self.prefix_cache and self._evict_prefix(len(starved)) > 0:
-            return True
-        if not self.running:
-            return False
-        self._preempt(min(self.running, key=lambda r: r.committed))
-        return True
-
-    # -- the decode loop ----------------------------------------------------------
-
-    def _record_ttft(self, req: Request) -> None:
-        """First generated token landed: freeze the request's TTFT and fold
-        it into the EngineStats means (host arithmetic only).  A restarted
-        request keeps its original submit time — restarts are part of the
-        latency the user saw."""
-        req.first_token_at = time.time()
-        req.first_token_step = self.stats.steps + 1  # steps increments at end
-        self._ttft_steps_total += req.ttft_steps
-        self._ttft_seconds_total += req.ttft_seconds
-        self.stats.ttft_requests += 1
-        self.stats.mean_ttft_steps = (
-            self._ttft_steps_total / self.stats.ttft_requests)
-        self.stats.mean_ttft_seconds = (
-            self._ttft_seconds_total / self.stats.ttft_requests)
-
-    def inject_external_reclaim(self, req: Request) -> None:
-        """TEST/RACE HOOK — simulate a reclaimer racing the decode loop: the
-        request's pages are freed (versions bump, the warning fires) while
-        the scheduler still believes the request is running with a valid
-        snapshot.  This is the OA race proper: the NEXT step's fused
-        validation must observe the version mismatch, discard the row and
-        restart the request (``reader_restarts``).  Ownership of the pages
-        transfers to the reclaimer — the restart path clears the slot
-        without freeing again.
-        """
-        assert req in self.running and req.slot is not None
-        self.pool = pp.free_pages(self.pool, self._bt[req.slot])
-        self._mirror_slot_release(req)
-        req.externally_reclaimed = True
-        req.reclaim_watermark = req.pages_held
-
-    def step(self, *, inject_preemption_of: Request | None = None) -> None:
-        """One batched decode step over all running requests.
-
-        ``inject_preemption_of`` preempts that request AFTER the step
-        launched but BEFORE the engine consumes its results — its row's
-        output is discarded (the scheduler-overlap interleaving; used by
-        tests).  For the version-check race proper see
-        :meth:`inject_external_reclaim`.
-        """
-        if not self.running:
-            return
-        ps = self.page_size
-        self._step_idx += 1
-        # greedy decode never consumes the key — skip the fold_in dispatches
-        key = (self._base_key if self.greedy
-               else jax.random.fold_in(self._base_key, self._step_idx))
-
-        # chunk sizing (host mirrors only — committed/prompt lengths are
-        # host state, so picking the executable costs no device sync).  The
-        # C=1 variant is the classic decode step; the C=prefill_chunk
-        # variant runs whenever any row is still replaying its prompt —
-        # decoding rows ride along with n_new=1 (the mixed batch).  The
-        # Sarathi-style token budget reserves one token per decoding row
-        # and splits the rest across prefilling rows, realized through the
-        # TRACED chunk_budget scalar so no recompile happens per step.
-        n_prefill = sum(1 for r in self.running
-                        if r.committed < len(r.prompt))
-        if n_prefill and self.prefill_chunk > 1:
-            C = self.prefill_chunk
-            if self.token_budget is None:
-                budget = C
-            else:
-                n_decode = len(self.running) - n_prefill
-                budget = max(1, min(
-                    C, (self.token_budget - n_decode) // n_prefill))
-            budget = max(1, min(budget, self._chunk_budget_cap))
-        else:
-            C, budget = 1, 1
-
-        (self.kv, self.pool, self._bt, self._snap, self._len, self._last,
-         nxt, valid, grant_info, cow, adv) = fused_decode_step(
-            self.params, self.kv, self.pool, self._bt, self._snap,
-            self._len, self._last, self._active, self._pbuf, self._plen,
-            key, self._temperature,
-            (self._budget_one if C == 1 else jnp.asarray(budget, jnp.int32)),
-            cfg=self.cfg, impl=self.attn_impl, greedy=self.greedy,
-            pages_per_compute_block=self.pages_per_compute_block,
-            chunk_size=C)
-
-        # THE one host transfer of the steady-state step
-        tok_np, valid_np, grant_np, cow_np, adv_np = jax.device_get(
-            (nxt, valid, grant_info, cow, adv))
-
-        # host mirror of the device-side page grants (before any preemption
-        # can reset a row's counters).  grant_info (paged_decode): number of
-        # fresh pages granted (a chunk can straddle several), −1 = starved
-        # (all-or-nothing: the row got no pages); cow flags a COW copy
-        # among them.
-        cow_freed = False  # all COW decrefs land in ONE device unshare
-        # batch, so the device clock ticks AT MOST ONCE per step no matter
-        # how many pages hit zero — the mirror must follow the same rule
-        for req in self.running:
-            gi = int(grant_np[req.slot])
-            if gi <= 0:
-                continue  # nothing granted (0 = none needed, −1 = starved)
-            # grants landed (even if the row's validation fails this step)
-            self.stats.pages_allocated += gi
-            req.pages_held += gi
-            if cow_np[req.slot]:
-                # COW divergence: the fused step copied the shared page the
-                # row was about to write, repointed the block table at the
-                # copy and dropped the row's reference on the original.
-                # That grant REPLACED a page (net footprint unchanged); the
-                # share mirror shrinks — and if this row was the last
-                # sharer of an evicted page, the device freed it and ticked
-                # the clock.
-                req.pages_held -= 1
-                self.stats.cow_copies += 1
-                old = req.shared_chain.pop(req.committed // ps, None)
-                if old is not None:
-                    if (self._sharers.get(old, 0) == 1
-                            and old not in self._cache_pages):
-                        cow_freed = True
-                        self.stats.pages_reclaimed += 1
-                    self._dec_sharer(old)
-                    req.shared_held -= 1
-        if cow_freed:
-            self._warning_batches += 1
-            self.stats.warnings_fired = self._warning_batches
-
-        if inject_preemption_of is not None and inject_preemption_of in self.running:
-            # reclaim mid-flight, after the step launched: its results die
-            self._preempt(inject_preemption_of)
-
-        starved: list[Request] = []
-        for req in list(self.running):
-            if req.state != "running":
-                continue  # preempted mid-flight; its row is dead anyway
-            i = req.slot
-            if not valid_np[i]:
-                if grant_np[i] < 0:
-                    starved.append(req)  # stays running; retry after eviction
-                else:
-                    # OA validation failure: a page was reclaimed since its
-                    # snapshot — discard and restart from a known-valid state
-                    self.stats.reader_restarts += 1
-                    self._preempt(req)
-                continue
-            a = int(adv_np[i])  # chunk rows commit several tokens at once
-            was_prefilling = req.committed < len(req.prompt)
-            req.committed += a
-            self.stats.tokens_committed += a
-            if C > 1 and was_prefilling:
-                self.stats.prefill_tokens_chunked += a
-            if req.committed >= len(req.prompt) and len(req.generated) < req.max_new_tokens:
-                req.generated.append(int(tok_np[i]))
-                if req.first_token_step is None:
-                    self._record_ttft(req)
-            if len(req.generated) >= req.max_new_tokens:
-                req.state = "finished"
-                self.running.remove(req)
-                # retire: donate committed pages to the prefix index (cache
-                # on) or fire the warning and free (cache off)
-                self._free_slot(req, donate=True)
-        if starved:
-            self._pick_victim_and_preempt(starved)
-        if C > 1:
-            # AIMD: starved chunk grants back the budget off toward the
-            # token-at-a-time regime; clean chunked steps restore it
-            if starved:
-                self._chunk_budget_cap = max(
-                    1, min(budget, self._chunk_budget_cap) // 2)
-            else:
-                self._chunk_budget_cap = min(
-                    self.prefill_chunk, max(1, self._chunk_budget_cap) * 2)
-        self.stats.steps += 1
-        if C > 1:
-            self.stats.chunked_steps += 1
-
-    def run(self, max_steps: int = 10_000) -> EngineStats:
-        """Drive admit/step/maintain until the queue drains (or max_steps).
-        Steady-state steps keep the sync-free contract: one fused dispatch,
-        one ``device_get``; host work happens only at the allowed sync
-        points (admission, preemption, finish, maintenance)."""
-        t0 = time.time()
-        for _ in range(max_steps):
-            self._admit()
-            if not self.running and not self.queue:
-                break
-            if not self.running:  # queue blocked on memory: forced preemption failed
-                raise MemoryError("pool exhausted with empty running set")
-            self.step()
-            self._maintain()
-        if self.release_quiescence is not None:
-            self.shrink()  # drain: park the now-idle superblocks
-        self.stats.wall_seconds = time.time() - t0
-        self.stats.tokens_per_second = (
-            self.stats.tokens_committed / self.stats.wall_seconds
-            if self.stats.wall_seconds > 0 else 0.0)
-        return self.stats
+        return self.scheduler.index.evict(need_pages, freeable_only)

@@ -1,0 +1,148 @@
+"""Data-parallel multi-pool serving: N engines, one router.
+
+The payoff of the layered refactor (ARCHITECTURE.md): a replica is exactly
+one :class:`~repro.serving.engine.PagedServingEngine` — its own
+:class:`~repro.core.pagepool.DevicePagePool`, KV arena, manager and runner,
+placed on its own jax device (simulated host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in tests/CI, real
+accelerators in production).  Nothing is shared between pools — no page id
+ever crosses a replica boundary (the hypothesis interleaving test in
+``tests/test_parallel.py`` asserts conservation per pool) — so the OA
+invariants hold per replica by construction and each pool releases its own
+EMPTY superblocks on its own quiescence clock.
+
+The router is pure scheduler-layer arithmetic: a request goes to the
+replica whose prefix index matches the most prompt tokens (cache affinity
+— sharing only pays inside one pool), ties broken by pool pressure (the
+scheduler's outstanding-token ``load`` plus distinct live pages).
+
+Two drive modes:
+
+- :meth:`DataParallelEngine.step` — launch EVERY replica's fused dispatch
+  before collecting any (jax dispatch is async, so device work overlaps
+  while the host loops); deterministic, used by the interleaving tests.
+- :meth:`DataParallelEngine.run` — one driver thread per replica running
+  its own admit/step/maintain loop.  Python releases the GIL while a
+  thread blocks on its replica's ``device_get``, so N replicas keep N
+  devices busy — this is the throughput path ``benchmarks/multi_pool.py``
+  gates (≥1.6× aggregate tokens/sec at 2 replicas).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+
+from .engine import PagedServingEngine
+from .scheduler import Request
+from .stats import EngineStats, aggregate_stats
+
+
+class DataParallelEngine:
+    """N independent pool+runner replicas behind one prefix-affine,
+    pressure-balancing router (module docstring)."""
+
+    def __init__(self, cfg, params, *, replicas: int = 2, devices=None,
+                 **engine_kwargs):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        if devices is None:
+            devices = jax.devices()
+        self.replicas = [
+            PagedServingEngine(cfg, params,
+                               device=devices[i % len(devices)],
+                               **engine_kwargs)
+            for i in range(replicas)
+        ]
+        self._wall = 0.0
+
+    # -- routing -------------------------------------------------------------
+
+    def route(self, prompt: list[int]) -> int:
+        """Pick the replica for ``prompt``: longest prefix-cache match
+        first (KV sharing only pays inside one pool), then least pool
+        pressure — the scheduler's outstanding-token load with distinct
+        live pages as the tiebreak.  Pure host arithmetic on scheduler
+        state; never touches a device."""
+        best, best_key = 0, None
+        for i, eng in enumerate(self.replicas):
+            sched = eng.scheduler
+            m = sched.index.match(prompt)[0] if sched.prefix_cache else 0
+            key = (-m, sched.load(), sched.distinct_pages_in_use(), i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        """Route and queue one request; returns the replica's Request
+        handle (its ``_engine`` back-reference names the owning replica,
+        which is how the tests pin no-cross-pool-leakage)."""
+        return self.replicas[self.route(prompt)].submit(prompt, max_new_tokens)
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> None:
+        """One interleaved step across all replicas: admit everywhere,
+        LAUNCH every replica's fused dispatch, then collect each single
+        ``device_get`` — per-replica sync-freedom is preserved (still one
+        transfer per replica per step, asserted in tests/test_parallel.py)
+        and device work overlaps across pools while the host loops."""
+        for eng in self.replicas:
+            eng.scheduler.admit()
+        handles = [eng.launch_step() for eng in self.replicas]
+        for eng, handle in zip(self.replicas, handles):
+            eng.collect_step(handle)
+        for eng in self.replicas:
+            eng.scheduler.maintain()
+
+    def drained(self) -> bool:
+        """True when no replica holds queued or running work."""
+        return all(not e.scheduler.queue and not e.scheduler.running
+                   for e in self.replicas)
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        """Drain every replica with one driver thread each (the GIL is
+        released while a thread blocks on its replica's transfer, so the
+        fused steps genuinely overlap across devices).  Returns the
+        aggregated fleet stats over THIS call's wall clock."""
+        t0 = time.time()
+        errors: list[BaseException] = []
+
+        def drive(eng: PagedServingEngine) -> None:
+            try:
+                eng.run(max_steps)
+            except BaseException as exc:  # surfaced after the join
+                errors.append(exc)
+
+        threads = [threading.Thread(target=drive, args=(eng,), daemon=True)
+                   for eng in self.replicas
+                   if eng.scheduler.queue or eng.scheduler.running]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self._wall = time.time() - t0
+        if errors:
+            raise errors[0]
+        return self.stats
+
+    # -- maintenance / introspection -----------------------------------------
+
+    def shrink(self, keep_superblocks: int | None = None) -> int:
+        """Per-replica physical release: every pool parks its own EMPTY
+        superblocks above its own floor; returns the fleet total."""
+        return sum(e.shrink(keep_superblocks) for e in self.replicas)
+
+    @property
+    def stats(self) -> EngineStats:
+        """Aggregated fleet counters (per-replica stats summed; throughput
+        over the last :meth:`run`'s wall clock when one happened)."""
+        return aggregate_stats([e.stats for e in self.replicas],
+                               self._wall if self._wall > 0 else None)
+
+    @property
+    def per_replica_stats(self) -> list[EngineStats]:
+        """Each replica's own counters (the aggregate's inputs)."""
+        return [e.stats for e in self.replicas]

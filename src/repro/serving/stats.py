@@ -1,0 +1,193 @@
+"""Engine counters with a single owner per field.
+
+``EngineStats`` used to be a bag of public fields mutated from three call
+sites (the engine's decode loop, the release machinery and the sharing
+layer), which made double-counting a standing hazard for any refactor.  All
+updates now go through ``record_*`` methods and the layered stack
+(scheduler / kv_manager / runner) never assigns a field directly — enforced
+by a lint-style test in ``tests/test_layering.py``, while the existing
+host-mirror exactness tests (``warnings_fired == pool.clock``) prove no
+path double-counts.
+
+``warnings_fired`` doubles as the host mirror of the device pool's
+reclamation clock: :meth:`EngineStats.record_warning` is the ONE place the
+mirror ticks, and it must be called exactly when (and only when) a device
+batch performed at least one zero-transition free, release or remap-visible
+reclamation — the same once-per-batch rule the pool's ``clock`` follows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.allocator import AllocatorView
+from repro.core.vm import ReleaseStrategy
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Serving counters mirroring the paper's (warnings, restarts, reclaimed)
+    plus the superblock, sharing and chunked-prefill layers' accounting.
+    Mutate only through the ``record_*`` methods (single-owner contract)."""
+
+    steps: int = 0
+    tokens_committed: int = 0
+    preemptions: int = 0
+    reader_restarts: int = 0
+    warnings_fired: int = 0  # host mirror of the pool's reclamation clock
+    pages_reclaimed: int = 0
+    wall_seconds: float = 0.0
+    tokens_per_second: float = 0.0
+    # superblock / physical-release accounting (paper §3.2, device edition);
+    # refreshed wholesale from the allocator's AllocatorView — the engine no
+    # longer keeps its own copies of the anchor counters
+    superblocks_resident: int = 0
+    superblocks_mapped: int = 0
+    superblocks_released: int = 0
+    superblocks_remapped: int = 0
+    mapped_pages: int = 0
+    release_strategy: str = ReleaseStrategy.KEEP.value
+    # prefix-sharing / refcount accounting
+    pages_allocated: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_reused: int = 0
+    cow_copies: int = 0
+    prefix_cache_pages: int = 0
+    prefix_evictions: int = 0
+    # chunked-prefill / TTFT accounting (per-request detail on Request)
+    ttft_requests: int = 0
+    mean_ttft_steps: float = 0.0
+    mean_ttft_seconds: float = 0.0
+    chunked_steps: int = 0
+    prefill_tokens_chunked: int = 0
+
+    # -- the decode loop ----------------------------------------------------
+
+    def record_step(self, chunked: bool = False) -> None:
+        """One dispatch completed (``chunked``: the C>1 executable ran)."""
+        self.steps += 1
+        if chunked:
+            self.chunked_steps += 1
+
+    def record_commit(self, n: int, chunked_prefill: bool = False) -> None:
+        """``n`` tokens committed by one row (``chunked_prefill``: they were
+        prompt tokens advanced by a C>1 chunk)."""
+        self.tokens_committed += n
+        if chunked_prefill:
+            self.prefill_tokens_chunked += n
+
+    def record_preemption(self) -> None:
+        """A running request was optimistically reclaimed and requeued."""
+        self.preemptions += 1
+
+    def record_restart(self) -> None:
+        """A row failed OA validation (page reclaimed under its snapshot)."""
+        self.reader_restarts += 1
+
+    def record_ttft(self, steps: int, seconds: float) -> None:
+        """A request produced its first token; fold into the running means."""
+        self.ttft_requests += 1
+        self.mean_ttft_steps += (steps - self.mean_ttft_steps) / self.ttft_requests
+        self.mean_ttft_seconds += (
+            (seconds - self.mean_ttft_seconds) / self.ttft_requests)
+
+    def record_wall(self, seconds: float) -> None:
+        """A drain loop finished; derive throughput from committed tokens."""
+        self.wall_seconds = seconds
+        self.tokens_per_second = (
+            self.tokens_committed / seconds if seconds > 0 else 0.0)
+
+    # -- reclamation (the OA warning channel) -------------------------------
+
+    def record_warning(self) -> None:
+        """ONE reclamation batch hit a zero-transition: tick the clock
+        mirror.  Must stay in lockstep with ``pool.clock`` — the host-mirror
+        exactness tests compare the two after every workload."""
+        self.warnings_fired += 1
+
+    def record_reclaimed(self, pages: int) -> None:
+        """``pages`` page references hit zero and re-entered circulation."""
+        self.pages_reclaimed += pages
+
+    # -- allocation / sharing ------------------------------------------------
+
+    def record_grants(self, pages: int) -> None:
+        """``pages`` fresh device grants landed (incl. COW copies)."""
+        self.pages_allocated += pages
+
+    def record_cow(self) -> None:
+        """A divergent write was resolved by a fused page copy."""
+        self.cow_copies += 1
+
+    def record_prefix_hit(self, tokens: int) -> None:
+        """An admission matched a resident prefix covering ``tokens``."""
+        self.prefix_hits += 1
+        self.prefix_tokens_reused += tokens
+
+    def record_eviction(self) -> None:
+        """One prefix-cache entry was evicted (pressure or cap)."""
+        self.prefix_evictions += 1
+
+    def record_cache_pages(self, n: int) -> None:
+        """The donation index now pins ``n`` pages."""
+        self.prefix_cache_pages = n
+
+    # -- superblock anchors --------------------------------------------------
+
+    def record_superblocks(self, view: AllocatorView) -> None:
+        """Refresh the anchor mirrors from the allocator's own view — the
+        single source for the accounting the engine used to duplicate."""
+        self.superblocks_resident = view.superblocks_total
+        self.superblocks_mapped = view.superblocks_mapped
+        self.superblocks_released = view.superblocks_released
+        self.superblocks_remapped = view.superblocks_remapped
+        self.mapped_pages = view.pages_mapped
+        self.release_strategy = view.release_strategy
+
+
+def aggregate_stats(parts: list[EngineStats],
+                    wall_seconds: float | None = None) -> EngineStats:
+    """Sum per-replica ``EngineStats`` into one fleet-wide view.
+
+    Counters add; TTFT means weight by each replica's request count; with
+    ``wall_seconds`` given (the parallel driver's wall clock) throughput is
+    total tokens over THAT wall — replicas run concurrently, so summing
+    their individual rates would overstate a serial fleet and understate an
+    overlapped one.  Superblock anchors add across pools (each replica owns
+    an independent arena)."""
+    total = EngineStats()
+    for s in parts:
+        total.steps += s.steps
+        total.tokens_committed += s.tokens_committed
+        total.preemptions += s.preemptions
+        total.reader_restarts += s.reader_restarts
+        total.warnings_fired += s.warnings_fired
+        total.pages_reclaimed += s.pages_reclaimed
+        total.superblocks_resident += s.superblocks_resident
+        total.superblocks_mapped += s.superblocks_mapped
+        total.superblocks_released += s.superblocks_released
+        total.superblocks_remapped += s.superblocks_remapped
+        total.mapped_pages += s.mapped_pages
+        total.pages_allocated += s.pages_allocated
+        total.prefix_hits += s.prefix_hits
+        total.prefix_tokens_reused += s.prefix_tokens_reused
+        total.cow_copies += s.cow_copies
+        total.prefix_cache_pages += s.prefix_cache_pages
+        total.prefix_evictions += s.prefix_evictions
+        total.chunked_steps += s.chunked_steps
+        total.prefill_tokens_chunked += s.prefill_tokens_chunked
+        if s.ttft_requests:
+            n = total.ttft_requests + s.ttft_requests
+            total.mean_ttft_steps += (
+                (s.mean_ttft_steps - total.mean_ttft_steps)
+                * s.ttft_requests / n)
+            total.mean_ttft_seconds += (
+                (s.mean_ttft_seconds - total.mean_ttft_seconds)
+                * s.ttft_requests / n)
+            total.ttft_requests = n
+    if parts:
+        total.release_strategy = parts[0].release_strategy
+    wall = (max((s.wall_seconds for s in parts), default=0.0)
+            if wall_seconds is None else wall_seconds)
+    total.record_wall(wall)
+    return total

@@ -34,3 +34,27 @@ def test_serve_paged_runs_tiny():
     stats = main(tiny + ["--prefix-cache", "--shared-prefix", "4"])
     assert stats.prefix_hits > 0
     assert serve_paged.BASE  # the script's own workload stays importable
+
+
+def test_serve_provisions_for_shared_prefix_longer_than_prompt_len():
+    """Regression: ``max_pages_per_seq`` is now derived from the ACTUAL
+    prompt (shared prefix + tail) via the scheduler's worst-case helper.
+    The old CLI arithmetic used ``--prompt-len`` alone, so a shared prefix
+    longer than it under-provisioned the slots and ``submit`` rejected the
+    workload (the first step's COW grant demand was never coverable)."""
+    from repro.launch.serve import main
+    stats = main(["--requests", "3", "--num-pages", "24", "--page-size", "4",
+                  "--max-batch", "2", "--prompt-len", "6", "--max-new", "3",
+                  "--prefix-cache", "--shared-prefix", "16"])
+    assert stats.prefix_hits > 0  # the long shared prefix actually shared
+
+
+def test_serve_replicas_flag_runs_data_parallel():
+    """--replicas N serves the same workload through the multi-pool router
+    and reports aggregated fleet counters."""
+    from repro.launch.serve import main
+    stats = main(["--requests", "4", "--num-pages", "24", "--page-size", "4",
+                  "--max-batch", "2", "--prompt-len", "6", "--max-new", "3",
+                  "--replicas", "2"])
+    assert stats.tokens_committed > 0
+    assert stats.superblocks_resident > 0  # anchors aggregate across pools
