@@ -6,55 +6,65 @@ import json
 import sys
 
 
-def _checks(all_rows) -> bool:
+def _gate(gates: list, name: str, actual, threshold, passed: bool) -> None:
+    """Record one acceptance gate (actual vs threshold) and print its
+    verdict line.  Every gate lands in ``gates`` so a failing run can end
+    with ONE summary table of all of them instead of stopping at the
+    first miss."""
+    passed = bool(passed)
+    gates.append({"gate": name, "actual": actual, "threshold": threshold,
+                  "pass": passed})
+    print(f"check,{name},{'PASS' if passed else 'FAIL'}")
+
+
+def _checks(all_rows, crashed=()) -> bool:
     """Paper-claim checks (the reproduction's acceptance tests).  Each gate
     only fires when its benchmark's rows are present, so ``--check`` can run
-    a subset."""
+    a subset.  ``crashed`` names suite modules that raised instead of
+    producing rows — each becomes a failed gate.  On any failure the full
+    actual-vs-threshold table is printed before returning False."""
     import collections
     by = collections.defaultdict(dict)
     for r in all_rows:
         if "threads" in r:
             by[(r["bench"], r["threads"])][r["method"]] = r
 
-    checks = []
+    gates: list[dict] = []
+    print("# paper-claim checks")
+    for label in crashed:
+        _gate(gates, f"{label}: benchmark completes", "raised", "completes",
+              False)
     for (bench, t), methods in by.items():
         if bench.startswith("list5k_50i50r") and {"OA-BIT", "OA-VER"} <= methods.keys():
-            checks.append((
-                f"{bench}/t{t}: OA-VER fires <= warnings of OA-BIT",
-                methods["OA-VER"]["warnings_fired"] <= methods["OA-BIT"]["warnings_fired"],
-            ))
+            bit = methods["OA-BIT"]["warnings_fired"]
+            _gate(gates, f"{bench}/t{t}: OA-VER fires <= warnings of OA-BIT",
+                  methods["OA-VER"]["warnings_fired"], f"<= {bit}",
+                  methods["OA-VER"]["warnings_fired"] <= bit)
         if bench.startswith("ht") and "OA" in methods and "OA-VER" in methods:
-            checks.append((
-                f"{bench}/t{t}: allocator-backed OA avoids recycling phases",
-                methods["OA-VER"]["recycling_phases"] == 0,
-            ))
+            _gate(gates, f"{bench}/t{t}: allocator-backed OA avoids recycling phases",
+                  methods["OA-VER"]["recycling_phases"], "== 0",
+                  methods["OA-VER"]["recycling_phases"] == 0)
         if bench.startswith("ht10k_50i50r") and "OA" in methods:
-            checks.append((
-                f"{bench}/t{t}: pooled OA pays recycling phases",
-                methods["OA"]["recycling_phases"] > 0,
-            ))
-    print("# paper-claim checks")
-    ok = True
-    for name, passed in checks:
-        print(f"check,{name},{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+            _gate(gates, f"{bench}/t{t}: pooled OA pays recycling phases",
+                  methods["OA"]["recycling_phases"], "> 0",
+                  methods["OA"]["recycling_phases"] > 0)
     dw = {r["method"]: r for r in all_rows if r["bench"] == "dwcas_on_reclaimed"}
     if {"madvise", "shared_remap"} <= dw.keys():
-        passed = (dw["madvise"]["leaked_kib"] > 100
-                  and dw["shared_remap"]["leaked_kib"] < 64)
-        print(f"check,dwcas leak: madvise leaks ({dw['madvise']['leaked_kib']}KiB) "
-              f"but shared_remap does not ({dw['shared_remap']['leaked_kib']}KiB),"
-              f"{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+        _gate(gates,
+              f"dwcas leak: madvise leaks ({dw['madvise']['leaked_kib']}KiB) "
+              f"but shared_remap does not ({dw['shared_remap']['leaked_kib']}KiB)",
+              f"madvise={dw['madvise']['leaked_kib']}KiB,"
+              f"shared_remap={dw['shared_remap']['leaked_kib']}KiB",
+              "madvise > 100KiB and shared_remap < 64KiB",
+              dw["madvise"]["leaked_kib"] > 100
+              and dw["shared_remap"]["leaked_kib"] < 64)
 
     sp = [r for r in all_rows
           if r["bench"] == "decode_throughput" and r["method"] == "speedup"]
     if sp:
         x = sp[0]["speedup_x"]
-        passed = x >= 1.5
-        print(f"check,decode_throughput: sync-free engine >=1.5x legacy "
-              f"(got {x}x),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+        _gate(gates, f"decode_throughput: sync-free engine >=1.5x legacy "
+              f"(got {x}x)", x, ">= 1.5", x >= 1.5)
 
     # chunked-prefill gates (BENCH_prefill.json): one dispatch must cover C
     # prompt tokens — structurally fewer dispatches to the first token AND
@@ -63,15 +73,10 @@ def _checks(all_rows) -> bool:
           if r["bench"] == "prefill_throughput" and r["method"] == "speedup"]
     if pf:
         x, tr = pf[0]["speedup_x"], pf[0]["ttft_dispatch_ratio"]
-        passed = tr <= 0.25
-        print(f"check,prefill_throughput: chunked TTFT <= 1/4 the dispatches "
-              f"of token-at-a-time (got ratio {tr}),"
-              f"{'PASS' if passed else 'FAIL'}")
-        ok &= passed
-        passed = x >= 1.5
-        print(f"check,prefill_throughput: chunked prefill >=1.5x gen "
-              f"tokens/sec (got {x}x),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+        _gate(gates, f"prefill_throughput: chunked TTFT <= 1/4 the dispatches "
+              f"of token-at-a-time (got ratio {tr})", tr, "<= 0.25", tr <= 0.25)
+        _gate(gates, f"prefill_throughput: chunked prefill >=1.5x gen "
+              f"tokens/sec (got {x}x)", x, ">= 1.5", x >= 1.5)
 
     # prefix-sharing gates (BENCH_prefix.json): the refcounted cache must
     # pay for itself on the shared-system-prompt workload
@@ -79,14 +84,10 @@ def _checks(all_rows) -> bool:
           if r["bench"] == "prefix_cache" and r["method"] == "speedup"]
     if pc:
         x, ar = pc[0]["speedup_x"], pc[0]["alloc_ratio"]
-        passed = x >= 1.3
-        print(f"check,prefix_cache: sharing >=1.3x gen tokens/sec "
-              f"(got {x}x),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
-        passed = ar <= 0.7
-        print(f"check,prefix_cache: >=30% fewer page allocations "
-              f"(got ratio {ar}),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+        _gate(gates, f"prefix_cache: sharing >=1.3x gen tokens/sec "
+              f"(got {x}x)", x, ">= 1.3", x >= 1.3)
+        _gate(gates, f"prefix_cache: >=30% fewer page allocations "
+              f"(got ratio {ar})", ar, "<= 0.7", ar <= 0.7)
 
     # data-parallel multi-pool gates (BENCH_parallel.json): replicas must
     # genuinely overlap (a serialized fleet scores ~1.0x) and stay
@@ -98,15 +99,35 @@ def _checks(all_rows) -> bool:
           if r["bench"] == "multi_pool" and r["method"] == "speedup"]
     if mp:
         x, thr = mp[0]["speedup_2x"], mp[0]["gate_threshold"]
-        passed = bool(mp[0]["gate_pass"]) and x >= thr
-        print(f"check,multi_pool: 2 replicas >=min(1.6, 0.8x host ceiling "
+        _gate(gates, f"multi_pool: 2 replicas >=min(1.6, 0.8x host ceiling "
               f"{mp[0]['ceiling_2x']}x) aggregate tokens/sec "
-              f"(got {x}x, threshold {thr}x),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
-        passed = bool(mp[0]["sync_free_ok"])
-        print(f"check,multi_pool: per-replica sync-free invariant in fleet "
-              f"mode,{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+              f"(got {x}x, threshold {thr}x)", x, f">= {thr}",
+              bool(mp[0]["gate_pass"]) and x >= thr)
+        _gate(gates, "multi_pool: per-replica sync-free invariant in fleet "
+              "mode", bool(mp[0]["sync_free_ok"]), "True",
+              bool(mp[0]["sync_free_ok"]))
+
+    # chaos / self-healing gates (BENCH_chaos.json): the reference fault
+    # schedule (10% grant denials + one replica kill mid-run) must keep
+    # goodput within budget with zero lost or corrupted requests, and the
+    # hot path must stay sync-free WITH the fault schedule active
+    cg = [r for r in all_rows
+          if r["bench"] == "chaos_goodput" and r["method"] == "goodput"]
+    if cg:
+        r = cg[0]
+        _gate(gates, f"chaos_goodput: goodput >= {r['gate_threshold']}x "
+              f"fault-free under the reference fault schedule "
+              f"(got {r['goodput_ratio']}x)", r["goodput_ratio"],
+              f">= {r['gate_threshold']}",
+              r["goodput_ratio"] >= r["gate_threshold"])
+        _gate(gates, f"chaos_goodput: zero lost / zero corrupted requests "
+              f"(lost={r['lost']}, corrupted={r['corrupted']}, "
+              f"migrated={r['requests_migrated']})",
+              f"lost={r['lost']},corrupted={r['corrupted']}", "0/0",
+              r["lost"] == 0 and r["corrupted"] == 0)
+        _gate(gates, "chaos_goodput: sync-free invariant under injected "
+              "faults", bool(r["sync_free_ok"]), "True",
+              bool(r["sync_free_ok"]))
 
     mr = [r for r in all_rows if r["bench"] == "memory_release"]
     for r in mr:
@@ -116,35 +137,46 @@ def _checks(all_rows) -> bool:
         freed_kib = r["peak_kib"] - r["after_reclaim_kib"]
         if r["method"] in ("madvise", "shared_remap"):
             passed = freed_kib >= 0.9 * expect_kib and expect_kib > 0
+            thr = f">= {0.9 * expect_kib}KiB"
         else:  # keep
             passed = freed_kib <= 0.1 * max(expect_kib, 1)
-        print(f"check,memory_release/{r['method']} freed {freed_kib}KiB of "
-              f"{expect_kib}KiB released superblocks,{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+            thr = f"<= {0.1 * max(expect_kib, 1)}KiB"
+        _gate(gates, f"memory_release/{r['method']} freed {freed_kib}KiB of "
+              f"{expect_kib}KiB released superblocks", freed_kib, thr, passed)
 
     # device-pool watermark gates (BENCH_release.json, the device Fig. 3)
     mrd = {r["method"]: r for r in all_rows
            if r["bench"] == "memory_release_device"}
     if "madvise" in mrd:
         r = mrd["madvise"]
-        passed = r["watermark_ratio"] <= 0.25 and r["superblocks_released"] > 0
-        print(f"check,memory_release_device: mapped watermark follows load "
+        _gate(gates, f"memory_release_device: mapped watermark follows load "
               f"({r['after_drain_mapped_pages']}/{r['peak_mapped_pages']} pages "
-              f"after drain = {r['watermark_ratio']} <= 0.25),"
-              f"{'PASS' if passed else 'FAIL'}")
-        ok &= passed
-        passed = r["superblocks_remapped"] > 0 and r["preemptions"] == 0
-        print(f"check,memory_release_device: bursts remap "
+              f"after drain = {r['watermark_ratio']} <= 0.25)",
+              r["watermark_ratio"], "<= 0.25",
+              r["watermark_ratio"] <= 0.25 and r["superblocks_released"] > 0)
+        _gate(gates, f"memory_release_device: bursts remap "
               f"({r['superblocks_remapped']} superblocks) instead of "
-              f"preempting ({r['preemptions']}),{'PASS' if passed else 'FAIL'}")
-        ok &= passed
+              f"preempting ({r['preemptions']})",
+              f"remapped={r['superblocks_remapped']},"
+              f"preemptions={r['preemptions']}",
+              "remapped > 0 and preemptions == 0",
+              r["superblocks_remapped"] > 0 and r["preemptions"] == 0)
     if "keep" in mrd:
-        passed = mrd["keep"]["watermark_ratio"] >= 0.99
-        print(f"check,memory_release_device/keep: closed pool stays mapped "
-              f"(ratio {mrd['keep']['watermark_ratio']}),"
-              f"{'PASS' if passed else 'FAIL'}")
-        ok &= passed
-    return ok
+        _gate(gates, f"memory_release_device/keep: closed pool stays mapped "
+              f"(ratio {mrd['keep']['watermark_ratio']})",
+              mrd["keep"]["watermark_ratio"], ">= 0.99",
+              mrd["keep"]["watermark_ratio"] >= 0.99)
+
+    failed = [g for g in gates if not g["pass"]]
+    if failed:
+        # one summary table, every gate, actual vs threshold — a failing
+        # run reports the WHOLE picture instead of dying at the first miss
+        print(f"\n# gate summary: {len(failed)}/{len(gates)} FAILED")
+        print("status,gate,actual,threshold")
+        for g in gates:
+            print(f"{'PASS' if g['pass'] else 'FAIL'},{g['gate']},"
+                  f"{g['actual']},{g['threshold']}")
+    return not failed
 
 
 def main() -> None:
@@ -157,9 +189,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.paper_scale
 
-    from . import (decode_throughput, hash_table, linked_list, memory_release,
-                   memory_release_device, multi_pool, paged_attention_bench,
-                   prefix_cache, prefill_throughput)
+    from . import (chaos_goodput, decode_throughput, hash_table, linked_list,
+                   memory_release, memory_release_device, multi_pool,
+                   paged_attention_bench, prefix_cache, prefill_throughput)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -171,6 +203,7 @@ def main() -> None:
         (prefix_cache, "prefix_cache_sharing"),
         (prefill_throughput, "chunked_prefill"),
         (multi_pool, "data_parallel_multi_pool"),
+        (chaos_goodput, "chaos_goodput_self_healing"),
     ]
     if args.check:  # the BENCH-gated subset only
         suite = [
@@ -179,12 +212,21 @@ def main() -> None:
             (prefix_cache, "prefix_cache_sharing"),
             (prefill_throughput, "chunked_prefill"),
             (multi_pool, "data_parallel_multi_pool"),
+            (chaos_goodput, "chaos_goodput_self_healing"),
         ]
 
     all_rows = []
+    crashed = []
     for mod, label in suite:
         print(f"# {label}", flush=True)
-        rows = mod.run(quick=quick)
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as exc:  # a crashing suite is a failed gate, not
+            # the end of the run — the others still report actual numbers
+            print(f"# {label} CRASHED: {type(exc).__name__}: {exc}",
+                  flush=True)
+            crashed.append(label)
+            continue
         all_rows.extend(rows)
         for r in rows:
             name = f"{r['bench']}/{r['method']}" + (
@@ -194,7 +236,7 @@ def main() -> None:
                        if k not in ("bench", "method", "threads", "us_per_call")}
             print(f"{name},{us},{json.dumps(derived, default=float)}", flush=True)
 
-    if not _checks(all_rows):
+    if not _checks(all_rows, crashed):
         sys.exit(1)
 
 

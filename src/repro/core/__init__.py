@@ -4,6 +4,7 @@ a refcounted, versioned paged KV-cache pool with optimistic-access
 semantics (device layer, see pagepool.py)."""
 
 from .allocator import Allocator, AllocatorView
+from .chaos import ChaosAllocator, ChaosConfig
 from .atomic import AtomicRef, AtomicCounter, ReclaimStats, memory_barrier
 from .sizeclass import SIZE_CLASSES, MAX_SZ, size_to_class, class_block_size
 from .vm import Arena, ReleaseStrategy, LargeAllocation, PAGE_SIZE
@@ -13,6 +14,7 @@ from .datastructures import HarrisMichaelList, MichaelHashTable, NODE_SIZE
 
 __all__ = [
     "Allocator", "AllocatorView",
+    "ChaosAllocator", "ChaosConfig",
     "AtomicRef", "AtomicCounter", "ReclaimStats", "memory_barrier",
     "SIZE_CLASSES", "MAX_SZ", "size_to_class", "class_block_size",
     "Arena", "ReleaseStrategy", "LargeAllocation", "PAGE_SIZE",

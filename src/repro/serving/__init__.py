@@ -6,12 +6,13 @@ serving on top (``DataParallelEngine``)."""
 from .engine import PagedServingEngine
 from .kv_manager import DeviceStepState, KVCacheManager
 from .paged_decode import paged_decode_step, fused_decode_step, kv_storage_init
-from .parallel import DataParallelEngine
+from .parallel import DataParallelEngine, ReplicaStalled, WatchdogConfig
 from .runner import ModelRunner, StepResult
 from .scheduler import PrefixIndex, Request, Scheduler, required_pages_per_seq
 from .stats import EngineStats, aggregate_stats
 
-__all__ = ["PagedServingEngine", "DataParallelEngine", "Request",
+__all__ = ["PagedServingEngine", "DataParallelEngine", "WatchdogConfig",
+           "ReplicaStalled", "Request",
            "EngineStats", "aggregate_stats", "Scheduler", "PrefixIndex",
            "KVCacheManager", "DeviceStepState", "ModelRunner", "StepResult",
            "required_pages_per_seq",

@@ -32,6 +32,7 @@ import time
 
 import jax
 
+from repro.core.chaos import ChaosAllocator, ChaosConfig
 from repro.core.pagepool import DEFAULT_PAGES_PER_SUPERBLOCK, DevicePagePool
 from repro.core.vm import ReleaseStrategy
 from .kv_manager import KVCacheManager
@@ -58,6 +59,8 @@ class PagedServingEngine:
                  prefix_cache_pages: int | None = None,
                  prefill_chunk: int = 1,
                  token_budget: int | None = None,
+                 grant_retry_limit: int = 8,
+                 chaos: ChaosConfig | None = None,
                  device=None):
         self.cfg = cfg
         self.page_size = page_size
@@ -72,6 +75,11 @@ class PagedServingEngine:
             self.stats = EngineStats()
             allocator = DevicePagePool(num_pages, pages_per_superblock,
                                        release_strategy)
+            if chaos is not None:
+                # fault injection wraps the PROTOCOL, not the pool: the
+                # whole stack above sees denials/perturbations through the
+                # same Allocator surface it always talks to (core/chaos.py)
+                allocator = ChaosAllocator(allocator, chaos)
             self.stats.record_superblocks(allocator.view())
             self.kv_manager = KVCacheManager(
                 allocator, kv=kv_storage_init(cfg, num_pages, page_size),
@@ -89,13 +97,18 @@ class PagedServingEngine:
                 prefix_cache_pages=prefix_cache_pages,
                 prefill_chunk=prefill_chunk, token_budget=token_budget,
                 release_quiescence=release_quiescence,
-                min_mapped_superblocks=min_mapped_superblocks, engine=self)
+                min_mapped_superblocks=min_mapped_superblocks, engine=self,
+                grant_retry_limit=grant_retry_limit)
 
     # -- scheduling (delegates to the policy layer) --------------------------
 
-    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
-        """Queue a request (host-only; rejects over-capacity prompts)."""
-        return self.scheduler.submit(prompt, max_new_tokens)
+    def submit(self, prompt: list[int], max_new_tokens: int,
+               deadline: float | None = None) -> Request:
+        """Queue a request (host-only; rejects degenerate and over-capacity
+        inputs; ``deadline`` in relative seconds enables admission-time
+        shedding — see :meth:`Scheduler.submit`)."""
+        return self.scheduler.submit(prompt, max_new_tokens,
+                                     deadline=deadline)
 
     def step(self, *, inject_preemption_of: Request | None = None) -> None:
         """One batched decode/prefill step: the scheduler plans the chunk,

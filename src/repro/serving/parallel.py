@@ -1,4 +1,4 @@
-"""Data-parallel multi-pool serving: N engines, one router.
+"""Data-parallel multi-pool serving: N engines, one router, self-healing.
 
 The payoff of the layered refactor (ARCHITECTURE.md): a replica is exactly
 one :class:`~repro.serving.engine.PagedServingEngine` — its own
@@ -26,10 +26,28 @@ Two drive modes:
   thread blocks on its replica's ``device_get``, so N replicas keep N
   devices busy — this is the throughput path ``benchmarks/multi_pool.py``
   gates (≥1.6× aggregate tokens/sec at 2 replicas).
+
+**Self-healing (PR 6).**  With a :class:`WatchdogConfig`, :meth:`run`
+becomes a supervised loop: every driver thread updates a per-replica
+heartbeat each iteration, and the main thread watches for (a) a thread
+that died with an exception and (b) a heartbeat stale past the stall
+timeout.  Either marks the replica DEAD and triggers failover: all
+surviving workers park at a safe point (between steps), the dead
+replica's queued AND in-flight requests are re-routed onto survivors —
+a migrated request replays its already-generated tokens as prompt through
+the chunked-prefill path, so greedy decoding makes the stitched output
+token-exact (``Request.output_tokens``) — and, with ``auto_revive``, the
+dead slot gets a fresh engine (the fused executables live in the
+process-wide jit cache, so revival compiles nothing) and the backlog is
+rebalanced over the enlarged fleet.  The chaos benchmark
+(``benchmarks/chaos_goodput.py``) gates this machinery end-to-end: one
+replica killed mid-run plus 10% injected grant denials must keep goodput
+≥ 70% of the fault-free run with zero lost or corrupted requests.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 
@@ -40,23 +58,68 @@ from .scheduler import Request
 from .stats import EngineStats, aggregate_stats
 
 
+class ReplicaStalled(RuntimeError):
+    """A replica's heartbeat went stale past the watchdog's stall timeout
+    (hung device call, livelocked driver, …) and it was failed over."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """Replica health-watchdog knobs for :meth:`DataParallelEngine.run`.
+
+    ``stall_timeout`` — seconds without a heartbeat before a replica is
+    declared stalled.  ``poll_interval`` — how often the supervisor checks.
+    ``max_failovers`` — upper bound on failover rounds per :meth:`run`
+    (prevents a persistent fault from looping forever).  ``auto_revive`` —
+    replace a dead replica with a fresh engine and rebalance the backlog.
+    ``join_timeout`` — seconds to wait for surviving workers to park at a
+    safe point before treating them as stalled too."""
+
+    stall_timeout: float = 30.0
+    poll_interval: float = 0.02
+    max_failovers: int = 8
+    auto_revive: bool = False
+    join_timeout: float = 60.0
+
+
 class DataParallelEngine:
     """N independent pool+runner replicas behind one prefix-affine,
-    pressure-balancing router (module docstring)."""
+    pressure-balancing router, optionally supervised by a replica health
+    watchdog (module docstring)."""
 
     def __init__(self, cfg, params, *, replicas: int = 2, devices=None,
-                 **engine_kwargs):
+                 watchdog: WatchdogConfig | None = None, **engine_kwargs):
         if replicas < 1:
             raise ValueError("need at least one replica")
         if devices is None:
             devices = jax.devices()
+        self._ctor = (cfg, params)
+        self._devices = devices
+        self._engine_kwargs = dict(engine_kwargs)
+        self.watchdog = watchdog
         self.replicas = [
             PagedServingEngine(cfg, params,
                                device=devices[i % len(devices)],
-                               **engine_kwargs)
+                               **self._engine_kwargs_for(i))
             for i in range(replicas)
         ]
+        self.alive = [True] * replicas
+        # per-replica callable(engine) invoked once per driver iteration —
+        # the chaos tests' injection point for kills and stalls
+        self.step_hooks: list = [None] * replicas
+        self._retired: list[EngineStats] = []  # stats of replaced engines
         self._wall = 0.0
+
+    def _engine_kwargs_for(self, i: int) -> dict:
+        """Per-replica engine kwargs: a shared chaos config gets its seed
+        offset by the replica index, so fault schedules are INDEPENDENT
+        across the fleet (same seed would correlate every replica's rng
+        stream) while staying deterministic — including after a revive."""
+        kw = dict(self._engine_kwargs)
+        chaos = kw.get("chaos")
+        if chaos is not None:
+            kw["chaos"] = dataclasses.replace(chaos, seed=chaos.seed + i)
+        return kw
 
     # -- routing -------------------------------------------------------------
 
@@ -65,84 +128,259 @@ class DataParallelEngine:
         first (KV sharing only pays inside one pool), then least pool
         pressure — the scheduler's outstanding-token load with distinct
         live pages as the tiebreak.  Pure host arithmetic on scheduler
-        state; never touches a device."""
-        best, best_key = 0, None
+        state; never touches a device.  Dead replicas are skipped."""
+        best, best_key = None, None
         for i, eng in enumerate(self.replicas):
+            if not self.alive[i]:
+                continue
             sched = eng.scheduler
             m = sched.index.match(prompt)[0] if sched.prefix_cache else 0
             key = (-m, sched.load(), sched.distinct_pages_in_use(), i)
             if best_key is None or key < best_key:
                 best, best_key = i, key
+        if best is None:
+            raise RuntimeError("no live replica to route to")
         return best
 
-    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+    def submit(self, prompt: list[int], max_new_tokens: int,
+               deadline: float | None = None) -> Request:
         """Route and queue one request; returns the replica's Request
         handle (its ``_engine`` back-reference names the owning replica,
         which is how the tests pin no-cross-pool-leakage)."""
-        return self.replicas[self.route(prompt)].submit(prompt, max_new_tokens)
+        return self.replicas[self.route(prompt)].submit(
+            prompt, max_new_tokens, deadline=deadline)
 
     # -- stepping ------------------------------------------------------------
 
     def step(self) -> None:
-        """One interleaved step across all replicas: admit everywhere,
+        """One interleaved step across all live replicas: admit everywhere,
         LAUNCH every replica's fused dispatch, then collect each single
         ``device_get`` — per-replica sync-freedom is preserved (still one
         transfer per replica per step, asserted in tests/test_parallel.py)
         and device work overlaps across pools while the host loops."""
-        for eng in self.replicas:
+        live = [e for i, e in enumerate(self.replicas) if self.alive[i]]
+        for eng in live:
             eng.scheduler.admit()
-        handles = [eng.launch_step() for eng in self.replicas]
-        for eng, handle in zip(self.replicas, handles):
+        handles = [eng.launch_step() for eng in live]
+        for eng, handle in zip(live, handles):
             eng.collect_step(handle)
-        for eng in self.replicas:
+        for eng in live:
             eng.scheduler.maintain()
 
     def drained(self) -> bool:
-        """True when no replica holds queued or running work."""
+        """True when no live replica holds queued or running work."""
         return all(not e.scheduler.queue and not e.scheduler.running
-                   for e in self.replicas)
+                   for i, e in enumerate(self.replicas) if self.alive[i])
+
+    # -- the supervised drain loop -------------------------------------------
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         """Drain every replica with one driver thread each (the GIL is
         released while a thread blocks on its replica's transfer, so the
         fused steps genuinely overlap across devices).  Returns the
-        aggregated fleet stats over THIS call's wall clock."""
+        aggregated fleet stats over THIS call's wall clock.
+
+        Without a watchdog this is one supervised round: worker exceptions
+        stop the fleet promptly (survivors park at the next safe point,
+        joined WITH a timeout) and the first error propagates — a raising
+        replica can no longer hang the join.  With a watchdog, an error or
+        stall instead triggers failover + migration and the loop starts
+        another round on the survivors (bounded by ``max_failovers``)."""
         t0 = time.time()
-        errors: list[BaseException] = []
-
-        def drive(eng: PagedServingEngine) -> None:
-            try:
-                eng.run(max_steps)
-            except BaseException as exc:  # surfaced after the join
-                errors.append(exc)
-
-        threads = [threading.Thread(target=drive, args=(eng,), daemon=True)
-                   for eng in self.replicas
-                   if eng.scheduler.queue or eng.scheduler.running]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        self._wall = time.time() - t0
-        if errors:
-            raise errors[0]
+        rounds = 1 + (self.watchdog.max_failovers if self.watchdog else 0)
+        try:
+            for _ in range(rounds):
+                if not self._drive_round(max_steps):
+                    break
+        finally:
+            self._wall = time.time() - t0
         return self.stats
+
+    def _drive_round(self, max_steps: int) -> bool:
+        """One supervised round: drive every live replica that has work to
+        a clean drain, a failure, or a stall.  Returns True iff a failover
+        happened and the backlog needs another round."""
+        wd = self.watchdog
+        workers = [i for i in range(len(self.replicas))
+                   if self.alive[i] and (self.replicas[i].scheduler.queue
+                                         or self.replicas[i].scheduler.running)]
+        if not workers:
+            return False
+        hb = {i: time.monotonic() for i in workers}
+        stop = {i: threading.Event() for i in workers}
+        errors: dict[int, BaseException] = {}
+        threads = {
+            i: threading.Thread(target=self._drive,
+                                args=(i, hb, stop, errors, max_steps),
+                                daemon=True)
+            for i in workers
+        }
+        for t in threads.values():
+            t.start()
+        poll = wd.poll_interval if wd else 0.01
+        while any(t.is_alive() for t in threads.values()):
+            time.sleep(poll)
+            if wd is None:
+                if errors:  # fail fast: park survivors, propagate below
+                    for ev in stop.values():
+                        ev.set()
+                    break
+                continue
+            now = time.monotonic()
+            for i in [j for j, t in threads.items() if t.is_alive()]:
+                if now - hb[i] > wd.stall_timeout:
+                    # the thread may be wedged in a device call forever:
+                    # flag it, record the stall, and ABANDON it — if it
+                    # ever wakes it sees its stop event before touching
+                    # the (by then migrated) requests
+                    stop[i].set()
+                    errors[i] = ReplicaStalled(
+                        f"replica {i}: no heartbeat for "
+                        f"{now - hb[i]:.1f}s (> {wd.stall_timeout}s)")
+                    del threads[i]
+        join_timeout = wd.join_timeout if wd else 60.0
+        for i, t in list(threads.items()):
+            t.join(timeout=join_timeout)
+            if t.is_alive():  # refused to park: treat as stalled
+                stop[i].set()
+                errors.setdefault(i, ReplicaStalled(
+                    f"replica {i}: did not park within {join_timeout}s"))
+        failed = sorted(errors)
+        if not failed:
+            return False
+        if wd is None:
+            raise errors[failed[0]]
+        for i in failed:
+            self._fail_over(i, errors[i])
+        return True
+
+    def _drive(self, i: int, hb: dict, stop: dict, errors: dict,
+               max_steps: int) -> None:
+        """Driver-thread body for replica ``i``: the engine's own
+        admit/step/maintain drain loop, with a heartbeat write, the chaos
+        step hook and a safe-point stop check at the top of every
+        iteration.  Exceptions land in ``errors`` for the supervisor."""
+        eng = self.replicas[i]
+        t0 = time.time()
+        try:
+            for _ in range(max_steps):
+                hb[i] = time.monotonic()
+                hook = self.step_hooks[i]
+                if hook is not None:
+                    hook(eng)
+                if stop[i].is_set():
+                    return  # supervisor parked the fleet at a safe point
+                eng.scheduler.admit()
+                if not eng.scheduler.running and not eng.scheduler.queue:
+                    break
+                if not eng.scheduler.running:  # queue blocked on memory
+                    raise MemoryError("pool exhausted with empty running set")
+                eng.step()
+                eng.scheduler.maintain()
+            if eng.scheduler.release_quiescence is not None:
+                eng.shrink()  # drain: park the now-idle superblocks
+            eng.stats.record_wall(time.time() - t0)
+        except BaseException as exc:  # the supervisor owns the response
+            errors[i] = exc
+
+    # -- failover ------------------------------------------------------------
+
+    def _fail_over(self, i: int, err: BaseException) -> None:
+        """Replica ``i`` died (``err``): mark it dead, migrate its queued
+        and in-flight requests onto survivors, and — with ``auto_revive`` —
+        re-admit a fresh engine in its slot and rebalance the backlog.
+        Raises ``err`` when no survivor is left to absorb the work."""
+        self.alive[i] = False
+        eng = self.replicas[i]
+        eng.stats.record_replica_failure()
+        if not any(self.alive):
+            raise err
+        doomed = list(eng.scheduler.running) + list(eng.scheduler.queue)
+        eng.scheduler.running.clear()
+        eng.scheduler.queue.clear()
+        for req in doomed:
+            self._migrate(req)
+        if self.watchdog and self.watchdog.auto_revive:
+            self.revive(i)
+            self._rebalance()
+
+    def _migrate(self, req: Request) -> None:
+        """Re-route one request from a dead replica using committed-token
+        state: tokens it already generated are folded into the prompt
+        (``migrated_prefix`` keeps them visible as output), so the survivor
+        re-prefills them through the chunked path — cheap, and token-exact
+        under greedy decoding.  Device-side state on the dead replica is
+        simply abandoned; no page id crosses the pool boundary."""
+        if req.generated:
+            req.migrated_prefix.extend(req.generated)
+            req.prompt = req.prompt + req.generated
+            req.max_new_tokens -= len(req.generated)
+            req.generated = []
+        req.migrations += 1
+        req.committed = 0
+        req.slot = None
+        req.pages_held = 0
+        req.shared_held = 0
+        req.shared_chain = {}
+        req.externally_reclaimed = False
+        if req.max_new_tokens <= 0:  # nothing left to generate
+            req.state = "finished"
+            return
+        req.state = "queued"
+        tgt = self.replicas[self.route(req.prompt)]
+        req._engine = tgt
+        tgt.scheduler.queue.append(req)
+        tgt.stats.record_migration()
+
+    def revive(self, i: int) -> PagedServingEngine:
+        """Replace dead replica ``i`` with a fresh engine on the same
+        device and mark it live again.  The fused executables live in the
+        process-wide jit cache, so this compiles nothing; the old engine's
+        counters are retired into the fleet aggregate."""
+        assert not self.alive[i], "revive() is for dead replicas"
+        cfg, params = self._ctor
+        self._retired.append(self.replicas[i].stats)
+        self.replicas[i] = PagedServingEngine(
+            cfg, params, device=self._devices[i % len(self._devices)],
+            **self._engine_kwargs_for(i))
+        self.alive[i] = True
+        self.replicas[i].stats.record_revival()
+        return self.replicas[i]
+
+    def _rebalance(self) -> None:
+        """Spread every QUEUED (never running) request across the live
+        fleet through the router — after a revival the fresh replica is
+        idle and should take its share of the backlog.  Called only
+        between rounds, when no driver thread is running."""
+        pending: list[Request] = []
+        for j, e in enumerate(self.replicas):
+            if self.alive[j]:
+                pending.extend(e.scheduler.queue)
+                e.scheduler.queue.clear()
+        for req in pending:
+            tgt = self.replicas[self.route(req.prompt)]
+            req._engine = tgt
+            tgt.scheduler.queue.append(req)
 
     # -- maintenance / introspection -----------------------------------------
 
     def shrink(self, keep_superblocks: int | None = None) -> int:
         """Per-replica physical release: every pool parks its own EMPTY
         superblocks above its own floor; returns the fleet total."""
-        return sum(e.shrink(keep_superblocks) for e in self.replicas)
+        return sum(e.shrink(keep_superblocks)
+                   for i, e in enumerate(self.replicas) if self.alive[i])
 
     @property
     def stats(self) -> EngineStats:
-        """Aggregated fleet counters (per-replica stats summed; throughput
-        over the last :meth:`run`'s wall clock when one happened)."""
-        return aggregate_stats([e.stats for e in self.replicas],
-                               self._wall if self._wall > 0 else None)
+        """Aggregated fleet counters (per-replica stats summed, including
+        engines retired by failover; throughput over the last
+        :meth:`run`'s wall clock when one happened)."""
+        return aggregate_stats(
+            [e.stats for e in self.replicas] + self._retired,
+            self._wall if self._wall > 0 else None)
 
     @property
     def per_replica_stats(self) -> list[EngineStats]:
-        """Each replica's own counters (the aggregate's inputs)."""
+        """Each current replica's own counters (the aggregate's inputs,
+        minus retired engines)."""
         return [e.stats for e in self.replicas]

@@ -57,7 +57,16 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     committed: int = 0  # tokens (prompt+generated) whose KV is committed
     restarts: int = 0
-    state: str = "queued"  # queued | running | finished
+    state: str = "queued"  # queued | running | finished | shed
+    # SLO: absolute wall-clock deadline (None = best effort).  A request
+    # that provably cannot finish in time is SHED at admission — never
+    # mid-decode, where its pages and committed KV would be wasted work.
+    deadline: float | None = None
+    # failover: tokens generated on a replica that died; the re-prefill
+    # replays them as prompt, so ``generated`` restarts empty on the
+    # surviving replica and ``output_tokens`` stitches the full answer
+    migrated_prefix: list[int] = dataclasses.field(default_factory=list)
+    migrations: int = 0  # how many replica failures this request survived
     # time-to-first-token accounting (chunked prefill's headline metric)
     submitted_at: float = 0.0  # wall clock at submit()
     admitted_step: int | None = None  # engine step count at FIRST admission
@@ -78,6 +87,14 @@ class Request:
     def target_len(self) -> int:
         """Final sequence length (prompt + full generation budget)."""
         return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def output_tokens(self) -> list[int]:
+        """Every token generated for this request across migrations: the
+        tokens a dead replica produced (replayed as prompt on the survivor)
+        followed by the survivor's own generation.  Token-exact under greedy
+        decoding — the comparison surface the chaos benchmark oracles."""
+        return self.migrated_prefix + self.generated
 
     @property
     def ttft_seconds(self) -> float | None:
@@ -303,7 +320,8 @@ class Scheduler:
                  prefix_cache_pages: int | None = None,
                  prefill_chunk: int = 1, token_budget: int | None = None,
                  release_quiescence: int | None = None,
-                 min_mapped_superblocks: int = 1, engine: object = None):
+                 min_mapped_superblocks: int = 1, engine: object = None,
+                 grant_retry_limit: int = 8):
         self.kvm = kvm
         self.stats = stats
         self.num_pages = num_pages
@@ -321,6 +339,15 @@ class Scheduler:
         self.chunk_budget_cap = self.prefill_chunk
         self.release_quiescence = release_quiescence
         self.min_mapped_superblocks = max(1, min_mapped_superblocks)
+        # denied admission grants get this many PLAIN retries before the
+        # escalation chain (remap -> evict -> preempt) — a transient denial
+        # (chaos, or a release racing the alloc) should not cost a victim
+        self.grant_retry_limit = max(0, int(grant_retry_limit))
+        # EWMA seconds-per-committed-token: the shedding estimator's model
+        # of this engine's speed (None until the first timed step)
+        self.sec_per_token: float | None = None
+        self._last_step_t: float | None = None
+        self._speed_warmup = 2  # first steps pay jit compiles; skip them
         self.queue: deque[Request] = deque()
         self.running: list[Request] = []
         self._idle_ticks = 0
@@ -329,16 +356,39 @@ class Scheduler:
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+    def submit(self, prompt: list[int], max_new_tokens: int,
+               deadline: float | None = None) -> Request:
         """Queue a request (host-only; no device work until admission).
 
-        Over-long requests are REJECTED here with a clear error instead of
-        being silently clamped downstream: replay positions beyond the
-        slot's KV capacity would hit the fused step's defensive clamp and
-        generate garbage.  (``MemoryError`` for pool-wide exhaustion still
-        comes from admission — this guard is per-slot, knowable at submit.)
-        """
+        Degenerate inputs — an empty prompt, a non-positive or non-int
+        generation budget, non-int token ids — are rejected HERE with a
+        clear ``ValueError`` instead of failing deep inside the fused step,
+        and over-long requests likewise: replay positions beyond the slot's
+        KV capacity would hit the fused step's defensive clamp and generate
+        garbage.  (``MemoryError`` for pool-wide exhaustion still comes
+        from admission — this guard is per-slot, knowable at submit.)
+
+        ``deadline`` is RELATIVE seconds from now; a request the admission
+        estimator judges unable to finish in time is shed at admission
+        (state ``"shed"``), never mid-decode."""
         prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token to decode from")
+        bad = [t for t in prompt
+               if isinstance(t, bool) or not isinstance(t, (int, np.integer))]
+        if bad:
+            raise ValueError(
+                f"prompt token ids must be ints, got {bad[0]!r} "
+                f"({type(bad[0]).__name__})")
+        prompt = [int(t) for t in prompt]
+        if (isinstance(max_new_tokens, bool)
+                or not isinstance(max_new_tokens, (int, np.integer))
+                or max_new_tokens <= 0):
+            raise ValueError(
+                f"max_new_tokens must be a positive int, got "
+                f"{max_new_tokens!r}")
+        max_new_tokens = int(max_new_tokens)
         cap_tokens = self.kvm.max_pages_per_seq * self.page_size
         if len(prompt) + max_new_tokens > cap_tokens:
             raise ValueError(
@@ -347,9 +397,12 @@ class Scheduler:
                 f"(max_pages_per_seq={self.kvm.max_pages_per_seq} × "
                 f"page_size={self.page_size}); split the prompt or raise "
                 f"max_pages_per_seq")
+        now = time.time()
         req = Request(rid=next(self._next_rid), prompt=prompt,
                       max_new_tokens=max_new_tokens, _engine=self._engine,
-                      submitted_at=time.time())
+                      submitted_at=now,
+                      deadline=None if deadline is None
+                      else now + float(deadline))
         self.queue.append(req)
         return req
 
@@ -397,6 +450,8 @@ class Scheduler:
         ps = self.page_size
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue[0]
+            if self._shed_if_hopeless(req):
+                continue  # SLO policy dropped it; try the next in line
             need_total = (req.target_len + ps - 1) // ps
             if need_total > min(self.num_pages, self.kvm.max_pages_per_seq):
                 raise MemoryError(
@@ -445,10 +500,19 @@ class Scheduler:
                     break  # remap + eviction fell short: a partial cover
                     # must not let admission steal a starved row's page
             if need_fresh:
+                denials = 0
                 while True:
                     fresh_page = self.kvm.alloc_fresh()
                     if fresh_page is not None:
                         break
+                    self.stats.record_grant_denial()
+                    denials += 1
+                    if denials <= self.grant_retry_limit:
+                        # bounded plain retry: a transient denial (chaos
+                        # fault, or a concurrent release racing the alloc)
+                        # should not immediately cost an eviction or victim
+                        self.stats.record_grant_retry()
+                        continue
                     # released memory covers the need? remap, then evict the
                     # prefix cache, and only then preempt a running request
                     if self.kvm.remap_for(1):
@@ -481,6 +545,25 @@ class Scheduler:
                 self.stats.record_prefix_hit(m)
             # a preemption above may have requeued the victim behind req;
             # keep admitting — the loop condition re-checks capacity
+
+    def _shed_if_hopeless(self, req: Request) -> bool:
+        """SLO admission control: drop ``req`` (state ``"shed"``) iff its
+        deadline has already passed, or the EWMA speed model says the
+        remaining work cannot finish in the remaining time.  Only ever
+        called on the QUEUE HEAD — a running request is never shed, because
+        its pages and committed KV are sunk cost worth finishing."""
+        if req.deadline is None:
+            return False
+        remaining = req.deadline - time.time()
+        est = (0.0 if self.sec_per_token is None
+               else (req.target_len - req.committed) * self.sec_per_token)
+        if remaining > 0 and est <= remaining:
+            return False
+        assert self.queue[0] is req
+        self.queue.popleft()
+        req.state = "shed"
+        self.stats.record_shed()
+        return True
 
     def _unshare_admission(self, shared: list[int]) -> None:
         """Back out the shared grants of an admission that could not secure
@@ -603,6 +686,7 @@ class Scheduler:
         finishes, starvation response and the AIMD budget update."""
         ps = self.page_size
         tok_np, valid_np, grant_np, cow_np, adv_np = res
+        committed_this_step = 0
         # host mirror of the device-side grants (before any preemption can
         # reset a row's counters); all COW decrefs landed in ONE device
         # unshare batch, so the clock ticked AT MOST ONCE — mirror follows
@@ -651,6 +735,7 @@ class Scheduler:
             a = int(adv_np[i])  # chunk rows commit several tokens at once
             was_prefilling = req.committed < len(req.prompt)
             req.committed += a
+            committed_this_step += a
             self.stats.record_commit(a, C > 1 and was_prefilling)
             if (req.committed >= len(req.prompt)
                     and len(req.generated) < req.max_new_tokens):
@@ -675,6 +760,31 @@ class Scheduler:
                 self.chunk_budget_cap = min(
                     self.prefill_chunk, max(1, self.chunk_budget_cap) * 2)
         self.stats.record_step(chunked=C > 1)
+        self._update_speed_model(committed_this_step)
+        self.stats.record_backpressure(
+            pressure=(self.distinct_pages_in_use()
+                      / max(1, self.kvm.mapped_pages)),
+            aimd=self.chunk_budget_cap / max(1, self.prefill_chunk),
+            queue_depth=len(self.queue))
+
+    def _update_speed_model(self, committed: int) -> None:
+        """Fold one step's wall time into the EWMA seconds-per-token the
+        shedding estimator uses.  Outlier samples 5× above the established
+        mean are dropped — they are compile or pause artifacts, and folding
+        one in would make admission shed half the queue after every
+        recompile."""
+        now = time.time()
+        last, self._last_step_t = self._last_step_t, now
+        if last is None or committed <= 0:
+            return
+        if self._speed_warmup > 0:
+            self._speed_warmup -= 1  # compile steps would poison the model
+            return
+        sample = (now - last) / committed
+        if self.sec_per_token is None:
+            self.sec_per_token = sample
+        elif sample < 5 * self.sec_per_token:
+            self.sec_per_token += 0.2 * (sample - self.sec_per_token)
 
     def _record_ttft(self, req: Request) -> None:
         """First generated token landed: freeze the request's TTFT and fold

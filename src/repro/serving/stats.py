@@ -60,6 +60,19 @@ class EngineStats:
     mean_ttft_seconds: float = 0.0
     chunked_steps: int = 0
     prefill_tokens_chunked: int = 0
+    # robustness / self-healing accounting (chaos layer, PR 6)
+    grant_denials: int = 0  # admission allocs the pool (or chaos) refused
+    grant_retries: int = 0  # bounded plain retries those denials consumed
+    requests_shed: int = 0  # rejected AT ADMISSION for a hopeless deadline
+    requests_migrated: int = 0  # requeued onto this replica from a dead one
+    replica_failures: int = 0  # this replica died or stalled mid-run
+    replica_revivals: int = 0  # fresh engines re-admitted after a failure
+    # backpressure gauges (latest observation, not counters): pool pressure
+    # is distinct-live-pages over mapped capacity, aimd_ratio the chunk
+    # budget cap over its configured chunk (1.0 = no backoff in force)
+    pool_pressure: float = 0.0
+    aimd_ratio: float = 1.0
+    queue_depth: int = 0
 
     # -- the decode loop ----------------------------------------------------
 
@@ -132,6 +145,40 @@ class EngineStats:
         """The donation index now pins ``n`` pages."""
         self.prefix_cache_pages = n
 
+    # -- robustness / self-healing -------------------------------------------
+
+    def record_grant_denial(self) -> None:
+        """An admission alloc was refused (pool exhausted or chaos-injected)."""
+        self.grant_denials += 1
+
+    def record_grant_retry(self) -> None:
+        """A denied admission grant was retried within the bounded budget."""
+        self.grant_retries += 1
+
+    def record_shed(self) -> None:
+        """A request was rejected at admission: its deadline cannot be met."""
+        self.requests_shed += 1
+
+    def record_migration(self) -> None:
+        """A request from a dead replica was requeued onto this one."""
+        self.requests_migrated += 1
+
+    def record_replica_failure(self) -> None:
+        """This replica died or stalled; the watchdog failed it over."""
+        self.replica_failures += 1
+
+    def record_revival(self) -> None:
+        """A failed replica slot was re-admitted with a fresh engine."""
+        self.replica_revivals += 1
+
+    def record_backpressure(self, pressure: float, aimd: float,
+                            queue_depth: int) -> None:
+        """Refresh the backpressure gauges callers throttle on (latest
+        observation wins; these are levels, not counters)."""
+        self.pool_pressure = pressure
+        self.aimd_ratio = aimd
+        self.queue_depth = queue_depth
+
     # -- superblock anchors --------------------------------------------------
 
     def record_superblocks(self, view: AllocatorView) -> None:
@@ -176,6 +223,17 @@ def aggregate_stats(parts: list[EngineStats],
         total.prefix_evictions += s.prefix_evictions
         total.chunked_steps += s.chunked_steps
         total.prefill_tokens_chunked += s.prefill_tokens_chunked
+        total.grant_denials += s.grant_denials
+        total.grant_retries += s.grant_retries
+        total.requests_shed += s.requests_shed
+        total.requests_migrated += s.requests_migrated
+        total.replica_failures += s.replica_failures
+        total.replica_revivals += s.replica_revivals
+        # gauges: the fleet is as pressured as its WORST replica, as backed
+        # off as its most-throttled one; queue depth adds
+        total.pool_pressure = max(total.pool_pressure, s.pool_pressure)
+        total.aimd_ratio = min(total.aimd_ratio, s.aimd_ratio)
+        total.queue_depth += s.queue_depth
         if s.ttft_requests:
             n = total.ttft_requests + s.ttft_requests
             total.mean_ttft_steps += (

@@ -1,6 +1,8 @@
 """Checkpoint manager: roundtrip (incl. bf16), atomic commit, resharding,
-async error surfacing; data-pipeline state capture."""
+async error surfacing; data-pipeline state capture; serving-path snapshot
+(mid-decode engine state → fresh pool → token-exact continuation)."""
 
+import dataclasses
 import os
 
 import jax
@@ -79,6 +81,56 @@ def test_restore_with_shardings(tmp_path):
     sh = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), t)
     restored, _, _ = cm.restore(jax.eval_shape(lambda: tree()), shardings=sh)
     assert all(x.sharding.device_set == {dev} for x in jax.tree.leaves(restored))
+
+
+def test_serving_engine_snapshot_restores_token_exact(tmp_path):
+    """Snapshot a MID-DECODE serving engine (params + per-request committed
+    token state as the checkpoint ``extra``), restore into a fresh engine
+    with a fresh page pool, and continue: the stitched outputs must equal
+    an uninterrupted run token-for-token.  This is the same re-prefill
+    continuation the failover path uses — the KV pages themselves are
+    recomputable state and deliberately NOT checkpointed."""
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serving import PagedServingEngine
+
+    cfg = dataclasses.replace(reduced(get_config("olmo-1b")), n_layers=1)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    kw = dict(num_pages=32, page_size=4, max_batch=2, max_pages_per_seq=8)
+    prompts, max_new = [[5, 9, 13], [7, 11]], 8
+
+    oracle = []
+    for p in prompts:
+        e = PagedServingEngine(cfg, params, **kw)
+        r = e.submit(p, max_new)
+        e.run()
+        oracle.append(r.generated)
+
+    # run a fresh engine PARTWAY (some tokens generated, none finished)
+    eng = PagedServingEngine(cfg, params, **kw)
+    rs = [eng.submit(p, max_new) for p in prompts]
+    eng._admit()
+    for _ in range(4):
+        eng.step()
+    assert all(r.state == "running" and r.generated for r in rs)
+
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(11, {"params": params}, blocking=True, extra={
+        "requests": [{"prompt": r.prompt, "generated": r.generated,
+                      "remaining": r.max_new_tokens - len(r.generated)}
+                     for r in rs]})
+
+    like = jax.eval_shape(lambda: {"params": params})
+    restored, step, extra = cm.restore(like)
+    assert step == 11
+
+    fresh = PagedServingEngine(cfg, restored["params"], **kw)
+    conts = [fresh.submit(q["prompt"] + q["generated"], q["remaining"])
+             for q in extra["requests"]]
+    fresh.run()
+    stitched = [q["generated"] + c.generated
+                for q, c in zip(extra["requests"], conts)]
+    assert stitched == oracle
 
 
 def test_data_pipeline_determinism_and_resume():
