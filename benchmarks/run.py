@@ -78,6 +78,20 @@ def _checks(all_rows, crashed=()) -> bool:
         _gate(gates, f"prefill_throughput: chunked prefill >=1.5x gen "
               f"tokens/sec (got {x}x)", x, ">= 1.5", x >= 1.5)
 
+    # speculative-decoding gates (BENCH_speculative.json): drafting must
+    # pay on self-predictive text AND stay near-free when every draft is
+    # wrong — the AIMD cap collapsing to zero (the plain executable) is
+    # what the worst-case bound measures
+    sv = [r for r in all_rows
+          if r["bench"] == "speculative" and r["method"] == "speedup"]
+    if sv:
+        x, wr = sv[0]["speedup_x"], sv[0]["worst_case_ratio"]
+        _gate(gates, f"speculative: >=2.0x decode tokens/sec on repetitive "
+              f"text at batch 8 (got {x}x)", x, ">= 2.0", x >= 2.0)
+        _gate(gates, f"speculative: <=10% regression under an always-wrong "
+              f"drafter on random text (got ratio {wr})", wr, ">= 0.9",
+              wr >= 0.9)
+
     # prefix-sharing gates (BENCH_prefix.json): the refcounted cache must
     # pay for itself on the shared-system-prompt workload
     pc = [r for r in all_rows
@@ -191,7 +205,8 @@ def main() -> None:
 
     from . import (chaos_goodput, decode_throughput, hash_table, linked_list,
                    memory_release, memory_release_device, multi_pool,
-                   paged_attention_bench, prefix_cache, prefill_throughput)
+                   paged_attention_bench, prefix_cache, prefill_throughput,
+                   speculative)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -202,6 +217,7 @@ def main() -> None:
         (decode_throughput, "decode_throughput"),
         (prefix_cache, "prefix_cache_sharing"),
         (prefill_throughput, "chunked_prefill"),
+        (speculative, "speculative_decoding"),
         (multi_pool, "data_parallel_multi_pool"),
         (chaos_goodput, "chaos_goodput_self_healing"),
     ]
@@ -211,6 +227,7 @@ def main() -> None:
             (decode_throughput, "decode_throughput"),
             (prefix_cache, "prefix_cache_sharing"),
             (prefill_throughput, "chunked_prefill"),
+            (speculative, "speculative_decoding"),
             (multi_pool, "data_parallel_multi_pool"),
             (chaos_goodput, "chaos_goodput_self_healing"),
         ]

@@ -53,3 +53,30 @@ def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
         pages_per_compute_block=pages_per_compute_block,
         interpret=(impl == "interpret"), chunk_lens=chunk_lens,
     )
+
+
+def speculative_accept(target_toks, chunk_toks, draft_lens):
+    """On-device accept/reject scan for speculative decoding (fused-step
+    building block; oracle: ``repro.kernels.ref.speculative_accept_ref``).
+
+    The chunk axis carries a draft: slot 0's input is the row's last
+    committed token and slots 1..dlens are optimistic draft tokens.  The
+    verifier's greedy argmax at slot j (``target_toks[:, j]``) is what the
+    model WOULD emit after the inputs up to slot j — so draft j+1 stands
+    exactly when ``target_toks[:, j] == chunk_toks[:, j+1]``.  The longest
+    accepted prefix is a cumulative-product scan over that match vector
+    (the first mismatch zeroes everything after it), masked to each row's
+    live draft count.  This is the sequence-axis version of the pool's
+    ``validate_and_commit``: one vectorized validation pass decides how
+    much optimistic work commits, and everything past the first failure is
+    discarded without ever having blocked the optimistic path.
+
+    target_toks [B, C] int32; chunk_toks [B, C] int32; draft_lens [B] int32
+    (0..C−1).  Returns n_acc [B] int32 in [0, draft_lens].
+    """
+    C = target_toks.shape[1]
+    j = jnp.arange(max(C - 1, 1), dtype=jnp.int32)[: C - 1]
+    match = (target_toks[:, : C - 1] == chunk_toks[:, 1:]) \
+        & (j[None, :] < draft_lens[:, None])
+    return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                   axis=1).astype(jnp.int32)

@@ -86,3 +86,29 @@ def paged_attention_chunked_ref(q, k_pages, v_pages, block_tables, lengths,
         return o.reshape(C, Hq, D)
 
     return jax.vmap(one)(q, block_tables, lengths, chunk_lens).astype(q.dtype)
+
+
+def speculative_accept_ref(target_toks, chunk_toks, draft_lens):
+    """Python-loop oracle for the speculative accept scan (numpy-friendly).
+
+    target_toks [B, C] int — the verifier's greedy prediction at every chunk
+    slot; chunk_toks [B, C] int — the slot INPUTS (slot 0 the row's last
+    committed token, slots 1..dlens its drafts); draft_lens [B] int (0..C−1).
+    Returns n_acc [B] int32: per row, the longest prefix ``j < draft_lens``
+    with ``target_toks[j] == chunk_toks[j + 1]`` — draft j+1 is accepted iff
+    the model, fed the accepted prefix, would itself have emitted it.  Pure
+    host semantics the fused scan (``ops.speculative_accept``) must match
+    exactly; used by the kernel parity tests and the property tests.
+    """
+    import numpy as np
+    t = np.asarray(target_toks)
+    c = np.asarray(chunk_toks)
+    d = np.asarray(draft_lens)
+    B, C = t.shape
+    out = np.zeros((B,), np.int32)
+    for b in range(B):
+        n = 0
+        while n < min(int(d[b]), C - 1) and t[b, n] == c[b, n + 1]:
+            n += 1
+        out[b] = n
+    return out

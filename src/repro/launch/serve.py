@@ -52,6 +52,10 @@ def main(argv: list[str] | None = None):
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel pool+runner replicas (1 = single "
                          "engine; N>1 routes by prefix affinity + pressure)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: up to K n-gram-drafted "
+                         "tokens verified per fused dispatch (0 = off; "
+                         "greedy only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -69,13 +73,16 @@ def main(argv: list[str] | None = None):
     # worst-case per-slot demand from the scheduler's own arithmetic — the
     # REAL prompt length (shared + tail) can exceed --prompt-len
     max_prompt = max(len(p) for p in prompts)
-    pages_per_seq = required_pages_per_seq(max_prompt, args.max_new,
+    # + spec_k: a drafting row may hold up to K uncommitted (possibly
+    # rejected) positions past max_new in its final step's grant
+    pages_per_seq = required_pages_per_seq(max_prompt,
+                                           args.max_new + args.spec_k,
                                            args.page_size)
 
     engine_kw = dict(
         num_pages=args.num_pages, page_size=args.page_size,
         max_batch=args.max_batch, max_pages_per_seq=pages_per_seq,
-        prefix_cache=args.prefix_cache,
+        prefix_cache=args.prefix_cache, speculative_k=args.spec_k,
     )
     if args.replicas > 1:
         eng = DataParallelEngine(cfg, params, replicas=args.replicas,
@@ -92,6 +99,11 @@ def main(argv: list[str] | None = None):
     print(f"{label} OA counters: warnings={stats.warnings_fired} "
           f"preemptions={stats.preemptions} reader_restarts={stats.reader_restarts} "
           f"pages_reclaimed={stats.pages_reclaimed}")
+    if args.spec_k > 0:
+        print(f"{label} speculation: drafted={stats.tokens_drafted} "
+              f"accepted={stats.tokens_accepted} "
+              f"accept_rate={stats.accept_rate:.2f} "
+              f"draft_k={stats.draft_k} spec_steps={stats.spec_steps}")
     if args.prefix_cache:
         print(f"{label} prefix sharing: hits={stats.prefix_hits} "
               f"tokens_reused={stats.prefix_tokens_reused} "

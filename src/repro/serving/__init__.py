@@ -3,6 +3,7 @@ a layered stack (scheduler policy / kv-manager mechanics / fused runner)
 behind the ``PagedServingEngine`` facade, with data-parallel multi-pool
 serving on top (``DataParallelEngine``)."""
 
+from .draft import NGramDrafter
 from .engine import PagedServingEngine
 from .kv_manager import DeviceStepState, KVCacheManager
 from .paged_decode import paged_decode_step, fused_decode_step, kv_storage_init
@@ -12,7 +13,7 @@ from .scheduler import PrefixIndex, Request, Scheduler, required_pages_per_seq
 from .stats import EngineStats, aggregate_stats
 
 __all__ = ["PagedServingEngine", "DataParallelEngine", "WatchdogConfig",
-           "ReplicaStalled", "Request",
+           "ReplicaStalled", "Request", "NGramDrafter",
            "EngineStats", "aggregate_stats", "Scheduler", "PrefixIndex",
            "KVCacheManager", "DeviceStepState", "ModelRunner", "StepResult",
            "required_pages_per_seq",

@@ -61,6 +61,9 @@ class PagedServingEngine:
                  token_budget: int | None = None,
                  grant_retry_limit: int = 8,
                  chaos: ChaosConfig | None = None,
+                 speculative_k: int = 0,
+                 drafter=None,
+                 spec_probe_interval: int = 16,
                  device=None):
         self.cfg = cfg
         self.page_size = page_size
@@ -98,7 +101,9 @@ class PagedServingEngine:
                 prefill_chunk=prefill_chunk, token_budget=token_budget,
                 release_quiescence=release_quiescence,
                 min_mapped_superblocks=min_mapped_superblocks, engine=self,
-                grant_retry_limit=grant_retry_limit)
+                grant_retry_limit=grant_retry_limit, greedy=greedy,
+                speculative_k=speculative_k, drafter=drafter,
+                spec_probe_interval=spec_probe_interval)
 
     # -- scheduling (delegates to the policy layer) --------------------------
 
@@ -118,9 +123,11 @@ class PagedServingEngine:
         scheduler-overlap race; tests)."""
         if not self.scheduler.running:
             return
-        C, budget = self.scheduler.plan_chunk()
-        res = self.runner.execute(self.kv_manager, chunk_size=C, budget=budget)
-        self.scheduler.absorb(res, C, budget, inject_preemption_of)
+        C, budget, drafts = self.scheduler.plan_chunk()
+        res = self.runner.execute(self.kv_manager, chunk_size=C,
+                                  budget=budget, drafts=drafts)
+        self.scheduler.absorb(res, C, budget, inject_preemption_of,
+                              drafts=drafts)
 
     def launch_step(self):
         """Dispatch one step WITHOUT collecting its host transfer; returns a
@@ -129,16 +136,18 @@ class PagedServingEngine:
         any — jax dispatch is async, so the fused steps overlap."""
         if not self.scheduler.running:
             return None
-        C, budget = self.scheduler.plan_chunk()
+        C, budget, drafts = self.scheduler.plan_chunk()
         return (self.runner.launch(self.kv_manager, chunk_size=C,
-                                   budget=budget), C, budget)
+                                   budget=budget, drafts=drafts),
+                C, budget, drafts)
 
     def collect_step(self, handle) -> None:
         """Collect a :meth:`launch_step` handle: the single ``device_get``,
         then the scheduler absorbs the results."""
         if handle is not None:
-            pending, C, budget = handle
-            self.scheduler.absorb(self.runner.collect(pending), C, budget)
+            pending, C, budget, drafts = handle
+            self.scheduler.absorb(self.runner.collect(pending), C, budget,
+                                  drafts=drafts)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         """Drive admit/step/maintain until the queue drains (or max_steps);
@@ -213,6 +222,12 @@ class PagedServingEngine:
     def prefix_cache(self) -> bool:
         """Whether refcounted prefix sharing is enabled."""
         return self.scheduler.prefix_cache
+
+    @property
+    def speculative_k(self) -> int:
+        """Configured draft length K (0 = speculation off; scheduler-owned —
+        the live AIMD cap is ``scheduler.spec_k_cap``)."""
+        return self.scheduler.speculative_k
 
     @property
     def release_strategy(self) -> ReleaseStrategy:

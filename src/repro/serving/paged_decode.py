@@ -65,7 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pagepool as pp
-from repro.kernels.ops import paged_attention
+from repro.kernels.ops import paged_attention, speculative_accept
 from repro.models.layers import apply_norm, attention_qkv, mlp_apply
 from repro.models.transformer import embed_tokens, unembed
 
@@ -165,14 +165,15 @@ def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "impl", "greedy", "pages_per_compute_block",
-                     "chunk_size"),
+                     "chunk_size", "speculative"),
     donate_argnums=(1, 2, 3, 4, 5, 6),
 )
 def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
                       last_tok, active, prompt_buf, prompt_len, key,
-                      temperature, chunk_budget=1, *, cfg, impl: str = "ref",
+                      temperature, chunk_budget=1, draft_toks=None,
+                      draft_lens=None, *, cfg, impl: str = "ref",
                       greedy: bool = True, pages_per_compute_block: int = 1,
-                      chunk_size: int = 1):
+                      chunk_size: int = 1, speculative: bool = False):
     """The sync-free batched step: one dispatch, one host transfer — now
     covering up to ``chunk_size`` prompt tokens per prefilling row.
 
@@ -189,6 +190,25 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
       chunk_budget  [] int32 (traced — no recompile): per-row chunk cap this
                     step, the engine's Sarathi-style token-budget knob;
                     clipped to [1, chunk_size]
+      draft_toks    [B, chunk_size−1] int32 (``speculative`` only) — per-row
+                    optimistic draft tokens from the host-side drafter
+      draft_lens    [B] int32 (``speculative`` only) — live drafts per row
+                    (0..chunk_size−1); 0 = the row runs plain decode
+
+    Speculative decoding (``speculative=True``, greedy only): a DECODING
+    row's chunk carries its last committed token at slot 0 and up to C−1
+    draft tokens after it, so the same chunked append + in-chunk-causal
+    attention that serves prefill verifies all drafts in this ONE dispatch.
+    The verifier's argmax at slot j is what the model would emit after the
+    inputs up to j; an on-device accept scan
+    (``repro.kernels.ops.speculative_accept``) finds the longest accepted
+    draft prefix and the row commits ``n_acc + 1`` tokens — the accepted
+    drafts plus the bonus token the verifier emitted at the accept point.
+    Rejected slots' KV writes land past the committed length in pages the
+    row already holds: they are simply never committed — the sequence-axis
+    twin of the pool's OA discipline, where optimistic work that fails
+    validation is discarded, not undone.  Prefilling rows in the same batch
+    behave exactly as without speculation (mixed batches are one dispatch).
 
     Fused pipeline: (1) per-row chunk sizing — ``n_new = min(chunk_budget,
     prompt_len − lengths)`` for prefilling rows, 1 for decoding rows, so a
@@ -215,16 +235,24 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
 
     Returns (kv, pool, block_tables, snapshot, lengths, last_tok,
     tokens [B] int32, valid [B] bool, grant_info [B] int32, cow [B] bool,
-    adv [B] int32).  The engine does a single ``device_get`` of the last
-    five.  ``grant_info`` is the number of fresh pages granted to the row
+    adv [B] int32, n_acc [B] int32).  The engine does a single
+    ``device_get`` of the last six.  ``n_acc`` is the accepted-draft count
+    (always 0 without ``speculative``).  ``grant_info`` is the number of
+    fresh pages granted to the row
     this step (0..max_chunk_pages), or −1 when the row needed pages but the
     pool is dry (the row is starved — it did not advance and the scheduler
     must reclaim/remap before it can; grants are all-or-nothing per row).
     ``cow`` flags rows whose first grant was a COW copy of a shared page
     (refcount handoff — the copy replaces, not extends, the row's
     footprint).  ``adv`` is how many tokens the row actually committed
-    (0 for invalid rows, ``n_new`` otherwise).
+    (0 for invalid rows; ``n_new`` for prefilling rows, ``n_acc + 1`` for
+    speculative decode rows).
     """
+    if speculative and not greedy:
+        raise ValueError(
+            "speculative=True requires greedy decoding: the accept scan "
+            "compares the verifier's argmax, and lossless rejection "
+            "sampling for temperature > 0 is not implemented")
     B = block_tables.shape[0]
     M = block_tables.shape[1]
     page_size = kv["k"].shape[2]
@@ -233,12 +261,20 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     MG = max_chunk_pages(C, page_size)
     rows = jnp.arange(B)
 
-    # (1) per-row chunk sizing (device-side: no host knowledge of lengths)
+    # (1) per-row chunk sizing (device-side: no host knowledge of lengths).
+    # With speculation a DECODING row's chunk holds 1 + dlens tokens: its
+    # last committed token plus the drafts to verify.
     budget = jnp.clip(jnp.asarray(chunk_budget, jnp.int32), 1, C)
     prefilling = lengths < prompt_len
+    if speculative:
+        dlens = jnp.where(active & ~prefilling,
+                          jnp.clip(draft_lens, 0, C - 1), 0).astype(jnp.int32)
+        decode_n = 1 + dlens
+    else:
+        decode_n = 1
     n_new = jnp.where(active & prefilling,
                       jnp.minimum(budget, prompt_len - lengths),
-                      1).astype(jnp.int32)
+                      decode_n).astype(jnp.int32)
 
     # (2) batched multi-page growth + COW — one fused alloc_pages_batch for
     # every page the batch's chunks touch
@@ -293,34 +329,57 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     ppos = jnp.minimum(pos, cap - 1)
     ptok = jnp.take_along_axis(prompt_buf, ppos, axis=1)
-    tok_in = jnp.where(pos < prompt_len[:, None], ptok, last_tok[:, None])
+    if speculative:
+        # decode rows' chunk inputs: last committed token, then the drafts
+        gen_in = jnp.concatenate([last_tok[:, None], draft_toks], axis=1)
+    else:
+        gen_in = last_tok[:, None]
+    tok_in = jnp.where(pos < prompt_len[:, None], ptok, gen_in)
 
     # (4) model math (starved rows' appends are masked — see _chunk_core)
     x, kv = _chunk_core(
         params, kv, block_tables, lengths, tok_in, n_new, cfg=cfg, impl=impl,
         pages_per_compute_block=pages_per_compute_block, write_ok=grant_ok)
 
-    # (5) on-device token selection from the chunk's last live position —
-    # logits never leave the device, and only that one position is unembedded
-    last_idx = jnp.clip(n_new - 1, 0, C - 1)
-    xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
-    logits = unembed(cfg, params, xl)[:, 0].astype(jnp.float32)
-    if greedy:
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # (5) on-device token selection.  Plain path: only the chunk's last
+    # live position is unembedded — logits never leave the device.
+    # Speculative path: EVERY chunk slot is unembedded, the argmax at slot j
+    # is the verifier's verdict on draft j+1, and the accept scan turns the
+    # per-slot verdicts into a committed prefix length (the sequence-axis
+    # validate_and_commit).  The sampled token is the BONUS token from the
+    # accept point (for prefilling rows: from the last live slot, as ever).
+    if speculative:
+        tgt = jnp.argmax(unembed(cfg, params, x).astype(jnp.float32),
+                         axis=-1).astype(jnp.int32)  # [B, C]
+        n_acc = speculative_accept(tgt, tok_in, dlens)
+        sel = jnp.where(prefilling, jnp.clip(n_new - 1, 0, C - 1), n_acc)
+        nxt = jnp.take_along_axis(tgt, sel[:, None], axis=1)[:, 0]
+        commit_n = jnp.where(prefilling, n_new, n_acc + 1).astype(jnp.int32)
     else:
-        nxt = jax.random.categorical(
-            key, logits / jnp.maximum(temperature, 1e-6), axis=-1
-        ).astype(jnp.int32)
+        last_idx = jnp.clip(n_new - 1, 0, C - 1)
+        xl = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+        logits = unembed(cfg, params, xl)[:, 0].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits / jnp.maximum(temperature, 1e-6), axis=-1
+            ).astype(jnp.int32)
+        n_acc = jnp.zeros_like(lengths)
+        commit_n = n_new
     # a row's sample is a real next token only once its chunk reaches the
     # final prompt token (decode rows always; prefilling rows exactly on the
     # step their prompt completes)
     samples = (lengths + n_new) >= prompt_len
 
-    # (6) fused OA validation: one pass over page_version for all C tokens
+    # (6) fused OA validation: one pass over page_version for all C tokens.
+    # Speculative rows advance by the ACCEPTED prefix only — the rejected
+    # suffix's KV writes sit past the committed length in pages the row
+    # already holds, and the next append simply overwrites them.
     valid, _ = pp._validate_and_commit_impl(pool, block_tables, snapshot)
     valid = valid & active & grant_ok
-    adv = jnp.where(valid, n_new, 0).astype(jnp.int32)
+    adv = jnp.where(valid, commit_n, 0).astype(jnp.int32)
     lengths = lengths + adv
     last_tok = jnp.where(valid & samples, nxt, last_tok)
     return (kv, pool, block_tables, snapshot, lengths, last_tok,
-            nxt, valid, grant_info, cow, adv)
+            nxt, valid, grant_info, cow, adv, n_acc)

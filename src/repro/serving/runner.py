@@ -31,14 +31,16 @@ from .paged_decode import fused_decode_step
 class StepResult(NamedTuple):
     """One step's host-side results — the contents of the single
     ``device_get``: per-slot next tokens, OA validity, grant info
-    (fresh pages granted, −1 = starved), COW flags and advanced-token
-    counts, all as numpy arrays the scheduler consumes."""
+    (fresh pages granted, −1 = starved), COW flags, advanced-token
+    counts and accepted-draft counts (0 on non-speculative steps), all as
+    numpy arrays the scheduler consumes."""
 
     tokens: np.ndarray
     valid: np.ndarray
     grant_info: np.ndarray
     cow: np.ndarray
     adv: np.ndarray
+    n_acc: np.ndarray
 
 
 class ModelRunner:
@@ -64,40 +66,59 @@ class ModelRunner:
         self._step_idx = 0
 
     def launch(self, kvm: KVCacheManager, *, chunk_size: int = 1,
-               budget: int = 1):
+               budget: int = 1, drafts: dict | None = None):
         """Dispatch ONE fused step and immediately install the (possibly
         still in-flight — jax arrays are futures) device state back into
         the manager.  Returns the pending per-slot outputs for
         :meth:`collect`; no host transfer happens here, so a front end can
-        launch every replica before collecting any."""
+        launch every replica before collecting any.
+
+        ``drafts`` (slot → draft token list, from
+        :meth:`repro.serving.scheduler.Scheduler.plan_chunk`) selects the
+        SPECULATIVE executable: the plan is packed into dense
+        [B, chunk_size−1] / [B] arrays and rides the dispatch as a
+        host→device upload — an upload, never a download, so the
+        one-``device_get``-per-step invariant is untouched."""
         self._step_idx += 1
         # greedy decode never consumes the key — skip the fold_in dispatches
         key = (self._base_key if self.greedy
                else jax.random.fold_in(self._base_key, self._step_idx))
         st = kvm.step_state()
+        speculative = drafts is not None
+        if speculative:
+            B = kvm.max_batch
+            dt = np.zeros((B, max(chunk_size - 1, 1)), np.int32)
+            dl = np.zeros((B,), np.int32)
+            for slot, toks in drafts.items():
+                dl[slot] = len(toks)
+                dt[slot, :len(toks)] = toks
+            draft_args = (jnp.asarray(dt), jnp.asarray(dl))
+        else:
+            draft_args = (None, None)
         (kv, pool, bt, snap, lengths, last,
-         nxt, valid, grant_info, cow, adv) = fused_decode_step(
+         nxt, valid, grant_info, cow, adv, n_acc) = fused_decode_step(
             self.params, st.kv, st.pool, st.block_tables, st.snapshot,
             st.lengths, st.last_tok, st.active, st.prompt_buf, st.prompt_len,
             key, self._temperature,
             (self._budget_one if chunk_size == 1
              else jnp.asarray(budget, jnp.int32)),
+            draft_args[0], draft_args[1],
             cfg=self.cfg, impl=self.attn_impl, greedy=self.greedy,
             pages_per_compute_block=self.pages_per_compute_block,
-            chunk_size=chunk_size)
+            chunk_size=chunk_size, speculative=speculative)
         kvm.install_state(DeviceStepState(
             kv, pool, bt, snap, lengths, last,
             st.active, st.prompt_buf, st.prompt_len))
-        return (nxt, valid, grant_info, cow, adv)
+        return (nxt, valid, grant_info, cow, adv, n_acc)
 
     def collect(self, pending) -> StepResult:
         """THE one host transfer of a steady-state step: materialise the
-        five per-slot arrays in a single ``device_get``."""
+        six per-slot arrays in a single ``device_get``."""
         return StepResult(*jax.device_get(pending))
 
     def execute(self, kvm: KVCacheManager, *, chunk_size: int = 1,
-                budget: int = 1) -> StepResult:
+                budget: int = 1, drafts: dict | None = None) -> StepResult:
         """One full step: launch the fused dispatch, then collect its single
         host transfer (the single-replica path)."""
         return self.collect(self.launch(
-            kvm, chunk_size=chunk_size, budget=budget))
+            kvm, chunk_size=chunk_size, budget=budget, drafts=drafts))

@@ -28,6 +28,7 @@ from collections import deque
 import numpy as np
 
 from repro.core.vm import superblock_floor
+from .draft import NGramDrafter
 from .kv_manager import KVCacheManager
 from .stats import EngineStats
 
@@ -321,7 +322,9 @@ class Scheduler:
                  prefill_chunk: int = 1, token_budget: int | None = None,
                  release_quiescence: int | None = None,
                  min_mapped_superblocks: int = 1, engine: object = None,
-                 grant_retry_limit: int = 8):
+                 grant_retry_limit: int = 8, greedy: bool = True,
+                 speculative_k: int = 0, drafter=None,
+                 spec_probe_interval: int = 16):
         self.kvm = kvm
         self.stats = stats
         self.num_pages = num_pages
@@ -337,6 +340,25 @@ class Scheduler:
         # multi-page chunk grant halves the cap (floor 1 — token-at-a-time),
         # a starvation-free chunked step doubles it back
         self.chunk_budget_cap = self.prefill_chunk
+        self._planned_prefill = False  # did the LAST plan include prefill?
+        # speculative decoding: draft up to K tokens per decoding row, verify
+        # in one dispatch (greedy only — see submit()).  spec_k_cap is the
+        # live AIMD cap: a low-accept step halves it with FLOOR ZERO — k=1
+        # still pays the full C-wide speculative executable, so useless
+        # drafting must fall all the way back to the plain C=1 dispatch —
+        # and a probe draft every ``spec_probe_interval`` steps re-tests the
+        # workload so a later repetitive stretch can re-open the throttle.
+        self.greedy = bool(greedy)
+        self.speculative_k = max(0, int(speculative_k))
+        self.drafter = (drafter if drafter is not None
+                        else (NGramDrafter() if self.speculative_k else None))
+        self.spec_k_cap = self.speculative_k
+        self.spec_probe_interval = max(1, int(spec_probe_interval))
+        self._spec_probe = 0
+        # the speculative executable's STATIC chunk width: wide enough for
+        # the configured K (+1 for the last committed token at slot 0) and
+        # for a mixed batch's prefill chunks — ONE extra compile, total
+        self.spec_chunk = max(self.prefill_chunk, self.speculative_k + 1)
         self.release_quiescence = release_quiescence
         self.min_mapped_superblocks = max(1, min_mapped_superblocks)
         # denied admission grants get this many PLAIN retries before the
@@ -371,6 +393,12 @@ class Scheduler:
         ``deadline`` is RELATIVE seconds from now; a request the admission
         estimator judges unable to finish in time is shed at admission
         (state ``"shed"``), never mid-decode."""
+        if self.speculative_k > 0 and not self.greedy:
+            raise ValueError(
+                "speculative decoding requires greedy sampling: the accept "
+                "scan compares the verifier's argmax, and lossless "
+                "rejection sampling for temperature > 0 is not implemented "
+                "— set greedy=True or speculative_k=0")
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt: a request needs at least one "
@@ -433,7 +461,9 @@ class Scheduler:
         if r.committed < len(r.prompt) and chunk > 1:
             n_next = min(chunk, len(r.prompt) - r.committed)
         else:
-            n_next = 1
+            # a decoding row's speculative chunk appends up to 1 + K tokens
+            # (drafts included — rejected writes still need granted pages)
+            n_next = 1 + self.spec_k_cap
         last_pi = (r.committed + n_next - 1) // ps
         need = max(0, last_pi + 1 - r.pages_held)
         if (r.committed // ps) in r.shared_chain:
@@ -660,32 +690,92 @@ class Scheduler:
 
     # -- the step protocol (plan -> [runner executes] -> absorb) -------------
 
-    def plan_chunk(self) -> tuple[int, int]:
-        """Pick the executable (C) and the traced budget for this step from
-        host mirrors only.  C=1 is classic decode; C=prefill_chunk runs
-        whenever any row still replays its prompt, with the Sarathi budget
-        reserving one token per decoding row and splitting the rest."""
+    def _live_spec_k(self) -> int:
+        """The draft cap in force THIS step: the AIMD cap while it is open;
+        once backed off to zero, a 1-token probe every
+        ``spec_probe_interval`` steps (0 otherwise) so a workload that turns
+        self-predictive again can re-open the throttle."""
+        if self.speculative_k <= 0 or not self.greedy:
+            return 0
+        if self.spec_k_cap > 0:
+            return self.spec_k_cap
+        self._spec_probe += 1
+        if self._spec_probe >= self.spec_probe_interval:
+            self._spec_probe = 0
+            return 1
+        return 0
+
+    def plan_chunk(self) -> tuple[int, int, dict | None]:
+        """Pick the executable (C), the traced budget and the draft plan for
+        this step from host mirrors only.  C=1 is classic decode;
+        C=prefill_chunk runs whenever any row still replays its prompt,
+        with the Sarathi budget reserving one token per decoding row and
+        splitting the rest.  With speculation live, every decoding row asks
+        the drafter for up to K tokens; any proposal promotes the step to
+        the C=spec_chunk speculative executable (mixed prefill+draft
+        batches run in the SAME dispatch).  ``drafts`` maps slot → draft
+        token list, or None when this step runs non-speculatively — a
+        drafter with nothing to say costs the plain path nothing."""
         n_prefill = sum(1 for r in self.running
                         if r.committed < len(r.prompt))
+        drafts: dict | None = None
+        k_cap = self._live_spec_k()
+        if k_cap > 0 and self.drafter is not None:
+            proposals: dict[int, list[int]] = {}
+            for r in self.running:
+                if r.committed < len(r.prompt):
+                    continue  # prefilling rows replay, they don't draft
+                # never draft past the generation budget: full acceptance
+                # must land EXACTLY on max_new (the bonus token is +1), so
+                # the host mirrors and mid-draft finishes stay exact
+                room = r.max_new_tokens - len(r.generated) - 1
+                k = min(k_cap, room, self.spec_chunk - 1)
+                if k <= 0:
+                    continue
+                d = self.drafter.propose(r.prompt + r.generated, k)[:k]
+                if d:
+                    proposals[r.slot] = [int(t) for t in d]
+            if proposals:
+                drafts = proposals
+        self._planned_prefill = n_prefill > 0
+        if drafts is not None:
+            C = self.spec_chunk
+            budget = self._prefill_budget(C, n_prefill)
+            return C, budget, drafts
         if n_prefill and self.prefill_chunk > 1:
             C = self.prefill_chunk
-            if self.token_budget is None:
-                budget = C
-            else:
-                n_decode = len(self.running) - n_prefill
-                budget = max(1, min(
-                    C, (self.token_budget - n_decode) // n_prefill))
-            budget = max(1, min(budget, self.chunk_budget_cap))
-            return C, budget
-        return 1, 1
+            budget = self._prefill_budget(C, n_prefill)
+            return C, budget, None
+        return 1, 1, None
+
+    def _prefill_budget(self, C: int, n_prefill: int) -> int:
+        """Sarathi budget for the prefilling rows of a C-wide step: one
+        token reserved per decoding row, the rest split across prefills,
+        clipped by the AIMD chunk cap (1 when no row is prefilling — the
+        budget only shapes prefill chunks)."""
+        if not n_prefill:
+            return 1
+        if self.token_budget is None:
+            budget = C
+        else:
+            n_decode = len(self.running) - n_prefill
+            budget = max(1, min(
+                C, (self.token_budget - n_decode) // n_prefill))
+        return max(1, min(budget, self.chunk_budget_cap))
 
     def absorb(self, res, C: int, budget: int,
-               inject_preemption_of: Request | None = None) -> None:
+               inject_preemption_of: Request | None = None,
+               drafts: dict | None = None) -> None:
         """Fold one step's host results (the single ``device_get``) into the
         request mirrors: grant/COW accounting, OA validation outcomes,
-        finishes, starvation response and the AIMD budget update."""
+        finishes, starvation response and the AIMD budget updates (chunk
+        budget under memory pressure; draft K under the accept rate).
+        ``drafts`` is the slot → draft-tokens plan this step launched with
+        (None = non-speculative step): a valid speculative row committed
+        its accepted draft prefix plus the verifier's bonus token, so the
+        host mirror extends ``generated`` by ``n_acc + 1`` tokens."""
         ps = self.page_size
-        tok_np, valid_np, grant_np, cow_np, adv_np = res
+        tok_np, valid_np, grant_np, cow_np, adv_np, nacc_np = res
         committed_this_step = 0
         # host mirror of the device-side grants (before any preemption can
         # reset a row's counters); all COW decrefs landed in ONE device
@@ -719,6 +809,7 @@ class Scheduler:
             self.preempt(inject_preemption_of)
 
         starved: list[Request] = []
+        step_drafted = step_accepted = 0
         for req in list(self.running):
             if req.state != "running":
                 continue  # preempted mid-flight; its row is dead anyway
@@ -739,7 +830,18 @@ class Scheduler:
             self.stats.record_commit(a, C > 1 and was_prefilling)
             if (req.committed >= len(req.prompt)
                     and len(req.generated) < req.max_new_tokens):
-                req.generated.append(int(tok_np[i]))
+                row_drafts = (None if drafts is None or was_prefilling
+                              else drafts.get(i))
+                if row_drafts is not None:
+                    # speculative row: the accepted draft prefix committed,
+                    # then the verifier's bonus token (a == n_acc + 1)
+                    acc = int(nacc_np[i])
+                    step_drafted += len(row_drafts)
+                    step_accepted += acc
+                    self.stats.record_speculation(len(row_drafts), acc)
+                    req.generated.extend(row_drafts[:acc] + [int(tok_np[i])])
+                else:
+                    req.generated.append(int(tok_np[i]))
                 if req.first_token_step is None:
                     self._record_ttft(req)
             if len(req.generated) >= req.max_new_tokens:
@@ -752,14 +854,31 @@ class Scheduler:
             self.pick_victim_and_preempt(starved)
         if C > 1:
             # AIMD: starved chunk grants back the budget off toward the
-            # token-at-a-time regime; clean chunked steps restore it
+            # token-at-a-time regime; clean chunked PREFILL steps restore
+            # it (a pure-decode speculative step says nothing about chunks)
             if starved:
                 self.chunk_budget_cap = max(
                     1, min(budget, self.chunk_budget_cap) // 2)
-            else:
+            elif self._planned_prefill:
                 self.chunk_budget_cap = min(
                     self.prefill_chunk, max(1, self.chunk_budget_cap) * 2)
-        self.stats.record_step(chunked=C > 1)
+        if drafts is not None:
+            # AIMD on the draft cap, driven by the measured accept rate: a
+            # productive step (>= half the drafts accepted) doubles the cap
+            # back toward the configured K; an unproductive one halves it
+            # with FLOOR ZERO — k=1 still pays the full spec_chunk-wide
+            # executable, so useless drafting must drop to the plain C=1
+            # dispatch entirely (the probe in _live_spec_k re-tests later).
+            # Steps where every speculative row failed OA validation carry
+            # no signal and leave the cap alone.
+            if step_drafted:
+                if step_accepted * 2 >= step_drafted:
+                    self.spec_k_cap = min(self.speculative_k,
+                                          max(1, self.spec_k_cap) * 2)
+                else:
+                    self.spec_k_cap //= 2
+            self.stats.record_spec_step(self.spec_k_cap)
+        self.stats.record_step(chunked=C > 1 and self._planned_prefill)
         self._update_speed_model(committed_this_step)
         self.stats.record_backpressure(
             pressure=(self.distinct_pages_in_use()

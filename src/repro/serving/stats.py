@@ -60,6 +60,14 @@ class EngineStats:
     mean_ttft_seconds: float = 0.0
     chunked_steps: int = 0
     prefill_tokens_chunked: int = 0
+    # speculative decoding accounting (draft-and-verify, the sequence-axis
+    # OA validate/commit); accept_rate is the running tokens_accepted /
+    # tokens_drafted, draft_k the live AIMD cap (a gauge, not a counter)
+    tokens_drafted: int = 0
+    tokens_accepted: int = 0
+    accept_rate: float = 0.0
+    draft_k: int = 0
+    spec_steps: int = 0  # dispatches that ran the speculative executable
     # robustness / self-healing accounting (chaos layer, PR 6)
     grant_denials: int = 0  # admission allocs the pool (or chaos) refused
     grant_retries: int = 0  # bounded plain retries those denials consumed
@@ -109,6 +117,20 @@ class EngineStats:
         self.wall_seconds = seconds
         self.tokens_per_second = (
             self.tokens_committed / seconds if seconds > 0 else 0.0)
+
+    def record_speculation(self, drafted: int, accepted: int) -> None:
+        """One VALID speculative row verified ``drafted`` draft tokens and
+        accepted ``accepted`` of them; refresh the running accept rate."""
+        self.tokens_drafted += drafted
+        self.tokens_accepted += accepted
+        if self.tokens_drafted:
+            self.accept_rate = self.tokens_accepted / self.tokens_drafted
+
+    def record_spec_step(self, draft_k: int) -> None:
+        """One dispatch ran the speculative executable; ``draft_k`` is the
+        AIMD cap in force (gauge — latest observation wins)."""
+        self.spec_steps += 1
+        self.draft_k = draft_k
 
     # -- reclamation (the OA warning channel) -------------------------------
 
@@ -223,6 +245,11 @@ def aggregate_stats(parts: list[EngineStats],
         total.prefix_evictions += s.prefix_evictions
         total.chunked_steps += s.chunked_steps
         total.prefill_tokens_chunked += s.prefill_tokens_chunked
+        total.tokens_drafted += s.tokens_drafted
+        total.tokens_accepted += s.tokens_accepted
+        total.spec_steps += s.spec_steps
+        # draft_k is a gauge: report the most aggressive live cap
+        total.draft_k = max(total.draft_k, s.draft_k)
         total.grant_denials += s.grant_denials
         total.grant_retries += s.grant_retries
         total.requests_shed += s.requests_shed
@@ -243,6 +270,8 @@ def aggregate_stats(parts: list[EngineStats],
                 (s.mean_ttft_seconds - total.mean_ttft_seconds)
                 * s.ttft_requests / n)
             total.ttft_requests = n
+    if total.tokens_drafted:
+        total.accept_rate = total.tokens_accepted / total.tokens_drafted
     if parts:
         total.release_strategy = parts[0].release_strategy
     wall = (max((s.wall_seconds for s in parts), default=0.0)

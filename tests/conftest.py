@@ -1,6 +1,22 @@
 import os
 
+import pytest
+
 # Tests must see the real single-device CPU environment; the 512-device
 # override belongs ONLY to the dry-run entrypoint (repro/launch/dryrun.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+
+def pytest_configure(config):
+    # The `timeout = 300` hang guard in pytest.ini is only enforced when
+    # pytest-timeout is actually loaded; without it the key is an ignored
+    # unknown-option WARNING and a wedged watchdog test hangs CI until the
+    # 45-minute job limit.  Fail FAST in CI instead of silently running
+    # unguarded; local environments without the plugin stay usable.
+    if os.environ.get("CI") and not config.pluginmanager.hasplugin("timeout"):
+        raise pytest.UsageError(
+            "pytest-timeout is not installed/loaded, so the 300s hang guard "
+            "in pytest.ini is NOT enforced. CI must not run unguarded: "
+            "`pip install -r requirements-dev.txt` (and keep `-p timeout` "
+            "on the pytest command line so a missing plugin is an error).")

@@ -239,3 +239,51 @@ def test_stale_table_reads_are_safe_not_correct():
     out = paged_attention(q, kv, stale, jnp.array([8], jnp.int32),
                           impl="interpret")
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# speculative accept scan: fused primitive vs oracle
+
+
+def test_speculative_accept_matches_ref_random():
+    from repro.kernels.ops import speculative_accept
+    from repro.kernels.ref import speculative_accept_ref
+
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        B = int(rng.integers(1, 9))
+        C = int(rng.integers(2, 9))
+        # tiny alphabet so prefixes of every length actually occur
+        tgt = rng.integers(0, 3, (B, C)).astype(np.int32)
+        chunk = rng.integers(0, 3, (B, C)).astype(np.int32)
+        dlens = rng.integers(0, C, (B,)).astype(np.int32)
+        got = np.asarray(speculative_accept(jnp.asarray(tgt),
+                                            jnp.asarray(chunk),
+                                            jnp.asarray(dlens)))
+        want = speculative_accept_ref(tgt, chunk, dlens)
+        np.testing.assert_array_equal(got, want)
+        assert (got <= dlens).all() and (got >= 0).all()
+
+
+def test_speculative_accept_edge_cases():
+    from repro.kernels.ops import speculative_accept
+    from repro.kernels.ref import speculative_accept_ref
+
+    # C=1: no draft slots at all -> always 0 accepted
+    tgt = np.asarray([[5]], np.int32)
+    chunk = np.asarray([[5]], np.int32)
+    assert int(speculative_accept(jnp.asarray(tgt), jnp.asarray(chunk),
+                                  jnp.asarray([0], np.int32))[0]) == 0
+    # full acceptance: every draft equals the verifier's previous argmax
+    tgt = np.asarray([[7, 7, 7, 9]], np.int32)
+    chunk = np.asarray([[1, 7, 7, 7]], np.int32)
+    d = np.asarray([3], np.int32)
+    assert int(speculative_accept(jnp.asarray(tgt), jnp.asarray(chunk),
+                                  jnp.asarray(d))[0]) == 3
+    assert speculative_accept_ref(tgt, chunk, d)[0] == 3
+    # first-mismatch truncation: later matches must NOT resurrect the prefix
+    tgt = np.asarray([[7, 8, 7, 9]], np.int32)
+    chunk = np.asarray([[1, 7, 7, 7]], np.int32)  # slot1 ok, slot2 mismatch
+    assert int(speculative_accept(jnp.asarray(tgt), jnp.asarray(chunk),
+                                  jnp.asarray(d))[0]) == 1
+    assert speculative_accept_ref(tgt, chunk, d)[0] == 1

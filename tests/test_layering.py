@@ -183,13 +183,14 @@ class FakeRunner:
     scheduler's absorb loop runs — every active row valid, no grants
     (the fake workloads fit their admission page), token 7."""
 
-    def execute(self, kvm, *, chunk_size=1, budget=1):
+    def execute(self, kvm, *, chunk_size=1, budget=1, drafts=None):
         B = kvm.max_batch
         active = np.asarray([kvm.slots[i] is not None for i in range(B)])
         return StepResult(
             tokens=np.full((B,), 7, np.int32), valid=active,
             grant_info=np.zeros((B,), np.int32),
-            cow=np.zeros((B,), bool), adv=active.astype(np.int32))
+            cow=np.zeros((B,), bool), adv=active.astype(np.int32),
+            n_acc=np.zeros((B,), np.int32))
 
 
 def _fake_stack(num_pages=32, page_size=8, max_batch=2, **sched_kw):

@@ -134,6 +134,33 @@ def test_mixed_prefill_decode_step_is_single_transfer(monkeypatch, params):
         f"prefill/decode steps (sync-free hot path allows at most 1 per step)")
 
 
+def test_speculative_step_is_single_transfer(monkeypatch, params):
+    """Speculation must not cost the hot path anything: a drafting step
+    commits up to K+1 tokens but is still ONE fused dispatch and ONE
+    ``device_get`` — the draft tokens ride a host→device upload and the
+    accept/reject scan runs on device, its result landing in the same
+    six-array transfer every step already pays."""
+    eng = PagedServingEngine(CFG, params, num_pages=64, page_size=4,
+                             max_batch=2, max_pages_per_seq=12,
+                             speculative_k=4)
+    # self-repetitive prompts keep the n-gram drafter proposing every step
+    eng.submit([1, 2, 3, 1, 2, 3, 1, 2], 40)
+    eng.submit([5, 6, 5, 6, 5, 6], 40)
+    eng._admit()
+    for _ in range(4):  # prefill + compile both executables, settle AIMD-K
+        eng.step()
+    assert eng.scheduler.spec_k_cap > 0, "drafting must be live in the window"
+    counter = _TransferCounter()
+    _instrument(monkeypatch, counter)
+    nsteps = 6
+    for _ in range(nsteps):
+        eng.step()
+    assert counter.count <= nsteps, (
+        f"{counter.count} host transfers across {nsteps} speculative decode "
+        f"steps (sync-free hot path allows at most 1 per step)")
+    assert eng.stats.tokens_accepted > 0, "window must contain accepted drafts"
+
+
 def test_steady_state_results_still_correct(params):
     """The instrumented path above must not be a different code path: the
     same workload, run normally, matches a per-request dense result."""
