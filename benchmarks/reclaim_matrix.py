@@ -1,0 +1,189 @@
+"""Reclamation-policy matrix (ISSUE 8): OA vs epoch-grace vs interval.
+
+Two phases per policy, sharing the PR-2 bursty workload generator:
+
+- **steady**: one long homogeneous decode burst.  This is where the
+  policies' per-step cost differs — OA validates every step, epoch-grace
+  skips every step whose epoch saw no reclamation (the gate demands >=90%
+  skips here), interval never validates.
+- **bursty**: the admit/drain cycle from ``memory_release_device`` run
+  under each policy x {keep, madvise}.  Whatever the policy defers, the
+  mapped-page watermark must still FOLLOW the load under madvise (<=25% of
+  peak after drain) and must NOT under keep (the closed-pool baseline) —
+  deferred frees are allowed to delay the release, not to lose it.
+
+All samples read host mirrors only; the measured hot path is the
+production one.  Emits ``BENCH_reclaim.json``; ``benchmarks/run.py
+--check`` validates the thresholds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.reclaim_policy import POLICY_NAMES
+from repro.core.vm import ReleaseStrategy
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+BATCH = 4
+PAGE_SIZE = 2
+PROMPT_LEN = 4
+MAX_NEW = 12  # 16 tokens -> 8 pages per request (bursty phase)
+STEADY_NEW = 40  # long decode: steady-state steps dominate (steady phase)
+NUM_PAGES = 64
+SB_PAGES = 8  # 8 superblocks of 8 pages
+QUIESCENCE = 3
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_reclaim.json"
+
+
+def _workload(n_requests: int, seed: int, max_new: int = MAX_NEW):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, 500, (PROMPT_LEN,)).tolist(), max_new)
+            for _ in range(n_requests)]
+
+
+def _engine(params, cfg, policy: str, strategy: ReleaseStrategy,
+            max_pages: int = MAX_NEW):
+    return PagedServingEngine(
+        cfg, params, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+        max_batch=BATCH, max_pages_per_seq=max_pages,
+        pages_per_superblock=SB_PAGES, release_strategy=strategy,
+        release_quiescence=QUIESCENCE, min_mapped_superblocks=1,
+        reclaim_policy=policy)
+
+
+def _steady(params, cfg, policy: str):
+    """One homogeneous burst of long decodes: measure validation-pass
+    accounting and decode throughput where steady-state steps dominate."""
+    eng = _engine(params, cfg, policy, ReleaseStrategy.KEEP,
+                  max_pages=(PROMPT_LEN + STEADY_NEW) // PAGE_SIZE + 1)
+    handles = [eng.submit(p, n)
+               for p, n in _workload(BATCH, seed=0, max_new=STEADY_NEW)]
+    eng._admit()
+    eng.step()  # compile outside the timed window
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    assert all(r.state == "finished" for r in handles)
+    s = eng.stats
+    steps = max(s.steps, 1)
+    return {
+        "steps": s.steps,
+        "validation_passes": s.validation_passes,
+        "validation_skipped": s.validation_skipped,
+        "skip_ratio": round(s.validation_skipped / steps, 3),
+        "tokens_committed": s.tokens_committed,
+        "tokens_per_sec": round(s.tokens_committed / max(dt, 1e-9), 1),
+        "reader_restarts": s.reader_restarts,
+    }
+
+
+def _bursty(params, cfg, policy: str, strategy: ReleaseStrategy, *,
+            bursts: int, reqs_per_burst: int):
+    """The PR-2 admit/drain cycle under ``policy`` x ``strategy``: track
+    the mapped watermark and how many drain ticks the first physical
+    release takes (deferred frees may delay it, never lose it)."""
+    eng = _engine(params, cfg, policy, strategy)
+    timeline = []
+
+    def sample(phase: str) -> None:
+        timeline.append({
+            "step": eng.stats.steps, "phase": phase,
+            "mapped_pages": eng.stats.mapped_pages,
+            "running": len(eng.running),
+        })
+
+    handles = []
+    release_latency = 0  # drain ticks until the mapped watermark settles
+    sample("init")
+    t0 = time.perf_counter()
+    for b in range(bursts):
+        handles += [eng.submit(p, n) for p, n in _workload(
+            reqs_per_burst, seed=b)]
+        for _ in range(5000):
+            eng._admit()
+            if not eng.running and not eng.queue:
+                break
+            eng.step()
+            eng._maintain()
+            sample(f"burst{b}")
+        drain_mapped = []
+        for tick in range(QUIESCENCE + 1):
+            eng._maintain()
+            sample(f"drain{b}")
+            drain_mapped.append(eng.stats.mapped_pages)
+        # ticks this drain needed to reach its final watermark (deferred
+        # frees — interval limbo, chaos delays — may push this up, never
+        # past the drain: deferral delays the release, it must not lose it)
+        floor = drain_mapped[-1]
+        release_latency = max(release_latency, next(
+            i for i, m in enumerate(drain_mapped) if m == floor))
+    dt = time.perf_counter() - t0
+    assert all(r.state == "finished" for r in handles)
+    s = eng.stats
+    peak = max(t["mapped_pages"] for t in timeline)
+    after = timeline[-1]["mapped_pages"]
+    return {
+        "peak_mapped_pages": peak,
+        "after_drain_mapped_pages": after,
+        "watermark_ratio": round(after / max(peak, 1), 3),
+        "release_latency_ticks": release_latency,
+        "superblocks_released": s.superblocks_released,
+        "superblocks_remapped": s.superblocks_remapped,
+        "preemptions": s.preemptions,
+        "reader_restarts": s.reader_restarts,
+        "validation_passes": s.validation_passes,
+        "validation_skipped": s.validation_skipped,
+        "tokens_committed": s.tokens_committed,
+        "tokens_per_sec": round(s.tokens_committed / max(dt, 1e-9), 1),
+    }
+
+
+def run(quick: bool = True):
+    """Drive the full matrix; returns rows for ``benchmarks/run.py``."""
+    cfg = dataclasses.replace(reduced(get_config("olmo-1b")), n_layers=1)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    bursts = 2 if quick else 4
+    reqs_per_burst = 6 if quick else 12
+
+    record = {"workload": {
+        "batch": BATCH, "page_size": PAGE_SIZE, "num_pages": NUM_PAGES,
+        "pages_per_superblock": SB_PAGES, "prompt_len": PROMPT_LEN,
+        "max_new": MAX_NEW, "steady_new": STEADY_NEW, "bursts": bursts,
+        "reqs_per_burst": reqs_per_burst, "quiescence": QUIESCENCE,
+        "quick": quick,
+    }, "policies": {}}
+    # warm the process-global jit cache first: the policies share the SAME
+    # executables (do_validate is a traced boolean), so without this the
+    # first policy measured would be charged every XLA compile and the
+    # throughput column would be compile order, not validation cost
+    _steady(params, cfg, "oa-validate")
+    _bursty(params, cfg, "oa-validate", ReleaseStrategy.KEEP, bursts=1,
+            reqs_per_burst=reqs_per_burst)
+    rows = []
+    for policy in POLICY_NAMES:
+        entry = {"steady": _steady(params, cfg, policy), "bursty": {}}
+        rows.append({"bench": "reclaim_matrix",
+                     "method": f"{policy}/steady", **entry["steady"]})
+        for strategy in (ReleaseStrategy.KEEP, ReleaseStrategy.MADVISE):
+            b = _bursty(params, cfg, policy, strategy, bursts=bursts,
+                        reqs_per_burst=reqs_per_burst)
+            entry["bursty"][strategy.value] = b
+            rows.append({"bench": "reclaim_matrix",
+                         "method": f"{policy}/{strategy.value}", **b})
+        record["policies"][policy] = entry
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

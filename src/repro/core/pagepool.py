@@ -572,6 +572,14 @@ class DevicePagePool:
     reading :meth:`view` never costs a device transfer; the hot path
     (``serving.paged_decode.fused_decode_step``) keeps threading the raw
     pytree through its fused dispatch and hands it back via ``state``.
+
+    The pool itself is scheme-agnostic: versions bump on every
+    zero-transition and release regardless of whether a reader ever checks
+    them, so the reclamation policies in ``core/reclaim_policy.py`` can
+    elide the per-step validation pass (epoch-grace, interval) or defer the
+    frees (interval limbo) purely ABOVE this surface — no pool change, no
+    second code path, and ``oa-validate`` remains exactly this class used
+    as the paper describes.
     """
 
     def __init__(self, num_pages: int,

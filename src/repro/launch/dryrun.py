@@ -109,6 +109,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_lower
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):  # jax < 0.5 returns a one-element list
+            ca = ca[0] if ca else {}
         txt = compiled.as_text()
         hlo = analyze(txt, n_shards_hint=mesh.shape["model"])
         rec.update(

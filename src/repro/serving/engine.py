@@ -34,6 +34,7 @@ import jax
 
 from repro.core.chaos import ChaosAllocator, ChaosConfig
 from repro.core.pagepool import DEFAULT_PAGES_PER_SUPERBLOCK, DevicePagePool
+from repro.core.reclaim_policy import ReclamationPolicy, make_policy
 from repro.core.vm import ReleaseStrategy
 from .kv_manager import KVCacheManager
 from .paged_decode import kv_storage_init
@@ -53,7 +54,8 @@ class PagedServingEngine:
                  pages_per_compute_block: int = 1,
                  pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK,
                  release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
-                 release_quiescence: int | None = None,
+                 release_quiescence: int | str | None = None,
+                 reclaim_policy: str | ReclamationPolicy | None = None,
                  min_mapped_superblocks: int = 1,
                  prefix_cache: bool = False,
                  prefix_cache_pages: int | None = None,
@@ -83,6 +85,16 @@ class PagedServingEngine:
                 # whole stack above sees denials/perturbations through the
                 # same Allocator surface it always talks to (core/chaos.py)
                 allocator = ChaosAllocator(allocator, chaos)
+            # reclamation policy (core/reclaim_policy.py): a name, a ready
+            # instance, or None (the RECLAIM_POLICY env var, default
+            # oa-validate).  wrap() interposes OUTSIDE chaos so the interval
+            # limbo defers the frees the fault schedule perturbs too.
+            policy = (reclaim_policy
+                      if isinstance(reclaim_policy, ReclamationPolicy)
+                      else make_policy(reclaim_policy))
+            self._reclaim_policy = policy
+            self.stats.record_policy(policy.name)
+            allocator = policy.wrap(allocator)
             self.stats.record_superblocks(allocator.view())
             self.kv_manager = KVCacheManager(
                 allocator, kv=kv_storage_init(cfg, num_pages, page_size),
@@ -103,7 +115,8 @@ class PagedServingEngine:
                 min_mapped_superblocks=min_mapped_superblocks, engine=self,
                 grant_retry_limit=grant_retry_limit, greedy=greedy,
                 speculative_k=speculative_k, drafter=drafter,
-                spec_probe_interval=spec_probe_interval)
+                spec_probe_interval=spec_probe_interval,
+                reclaim_policy=policy)
 
     # -- scheduling (delegates to the policy layer) --------------------------
 
@@ -124,8 +137,10 @@ class PagedServingEngine:
         if not self.scheduler.running:
             return
         C, budget, drafts = self.scheduler.plan_chunk()
+        do_validate = self.scheduler.plan_validate()
         res = self.runner.execute(self.kv_manager, chunk_size=C,
-                                  budget=budget, drafts=drafts)
+                                  budget=budget, drafts=drafts,
+                                  do_validate=do_validate)
         self.scheduler.absorb(res, C, budget, inject_preemption_of,
                               drafts=drafts)
 
@@ -137,8 +152,10 @@ class PagedServingEngine:
         if not self.scheduler.running:
             return None
         C, budget, drafts = self.scheduler.plan_chunk()
+        do_validate = self.scheduler.plan_validate()
         return (self.runner.launch(self.kv_manager, chunk_size=C,
-                                   budget=budget, drafts=drafts),
+                                   budget=budget, drafts=drafts,
+                                   do_validate=do_validate),
                 C, budget, drafts)
 
     def collect_step(self, handle) -> None:
@@ -158,11 +175,24 @@ class PagedServingEngine:
             if not self.scheduler.running and not self.scheduler.queue:
                 break
             if not self.scheduler.running:  # queue blocked on memory
+                if self._reclaim_policy.drain_pending():
+                    continue  # deferred frees applied (no live reader —
+                    # every interval guarantee holds); retry admission
                 raise MemoryError("pool exhausted with empty running set")
             self.step()
             self.scheduler.maintain()
-        if self.scheduler.release_quiescence is not None:
-            self.shrink()  # drain: park the now-idle superblocks
+        if not self.scheduler.running:
+            # drain complete: apply any frees still deferred (interval
+            # limbo, chaos delays) so the mirrors and release floors see
+            # the true free state — zero readers, so this is always sound
+            self._reclaim_policy.flush()
+        if (self.scheduler.release_quiescence is not None
+                and not self.scheduler._adaptive_release):
+            # drain: park the now-idle superblocks.  Adaptive mode skips
+            # this eager shrink — its point is to keep capacity mapped
+            # across a regular burst cadence, releasing only when
+            # maintain()'s learned threshold says the drain is genuine.
+            self.shrink()
         self.stats.record_wall(time.time() - t0)
         return self.stats
 
@@ -233,6 +263,11 @@ class PagedServingEngine:
     def release_strategy(self) -> ReleaseStrategy:
         """The pool's physical-release strategy."""
         return self.kv_manager.allocator.release_strategy
+
+    @property
+    def reclaim_policy(self) -> ReclamationPolicy:
+        """The live reclamation backend (core/reclaim_policy.py)."""
+        return self._reclaim_policy
 
     # internal-but-stable hooks the test suites drive directly
     _HOOKS = {

@@ -27,6 +27,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.core.reclaim_policy import ReclamationPolicy, make_policy
 from repro.core.vm import superblock_floor
 from .draft import NGramDrafter
 from .kv_manager import KVCacheManager
@@ -320,11 +321,12 @@ class Scheduler:
                  prefix_cache: bool = False,
                  prefix_cache_pages: int | None = None,
                  prefill_chunk: int = 1, token_budget: int | None = None,
-                 release_quiescence: int | None = None,
+                 release_quiescence: int | str | None = None,
                  min_mapped_superblocks: int = 1, engine: object = None,
                  grant_retry_limit: int = 8, greedy: bool = True,
                  speculative_k: int = 0, drafter=None,
-                 spec_probe_interval: int = 16):
+                 spec_probe_interval: int = 16,
+                 reclaim_policy: ReclamationPolicy | None = None):
         self.kvm = kvm
         self.stats = stats
         self.num_pages = num_pages
@@ -359,7 +361,23 @@ class Scheduler:
         # the configured K (+1 for the last committed token at slot 0) and
         # for a mixed batch's prefill chunks — ONE extra compile, total
         self.spec_chunk = max(self.prefill_chunk, self.speculative_k + 1)
+        # release_quiescence: int = static idle-tick floor, "adaptive" =
+        # Hyaline-style threshold tracking an EWMA of admit-burst
+        # inter-arrival gaps (see _release_threshold), None = never release
         self.release_quiescence = release_quiescence
+        self._adaptive_release = release_quiescence == "adaptive"
+        # EWMA of admit-burst inter-arrival gaps, in queue-empty maintain
+        # ticks (the same clock _idle_ticks runs on); None until the first
+        # gap is observed
+        self._gap_ewma: float | None = None
+        self._adaptive_floor = 2  # lower clamp once a cadence is learned
+        self._adaptive_bootstrap = 16  # threshold before ANY gap is observed
+        # reclamation policy: plans whether each fused step runs the OA
+        # validation pass, and (interval) defers frees behind the allocator
+        self.policy = (reclaim_policy if reclaim_policy is not None
+                       else make_policy())
+        self._step_validates = True  # absorb()'s view of the LAST plan
+        self._planned_clock = 0  # clock mirror at the last plan
         self.min_mapped_superblocks = max(1, min_mapped_superblocks)
         # denied admission grants get this many PLAIN retries before the
         # escalation chain (remap -> evict -> preempt) — a transient denial
@@ -431,6 +449,14 @@ class Scheduler:
                       submitted_at=now,
                       deadline=None if deadline is None
                       else now + float(deadline))
+        if self._idle_ticks > 0:
+            # a burst ended a queue-empty stretch: fold its length into the
+            # EWMA the adaptive release threshold tracks (Hyaline-style),
+            # and zero the counter so the rest of this burst folds nothing
+            g = float(self._idle_ticks)
+            self._gap_ewma = (g if self._gap_ewma is None
+                              else 0.7 * self._gap_ewma + 0.3 * g)
+            self._idle_ticks = 0
         self.queue.append(req)
         return req
 
@@ -549,6 +575,12 @@ class Scheduler:
                         continue
                     if self.prefix_cache and self.index.evict(1) > 0:
                         continue
+                    if self.policy.pending_frees():
+                        # deferred frees (interval limbo) mature within the
+                        # lag; a preemption now would only add to the limbo
+                        # without making a single page grantable — wait
+                        self._unshare_admission(shared)
+                        return
                     victim = self.pick_victim(exclude=req)
                     if victim is None:
                         self._unshare_admission(shared)
@@ -670,6 +702,8 @@ class Scheduler:
             return True
         if not self.running:
             return False
+        if self.policy.pending_frees():
+            return False  # limbo frees mature within the lag; retry then
         self.preempt(min(self.running, key=lambda r: r.committed))
         return True
 
@@ -704,6 +738,19 @@ class Scheduler:
             self._spec_probe = 0
             return 1
         return 0
+
+    def plan_validate(self) -> bool:
+        """Ask the reclamation policy whether THIS step's fused dispatch
+        must run the OA validation pass (host mirrors only — the clock
+        mirror is ``stats.warnings_fired``).  Remembers the verdict and the
+        mirror value for :meth:`absorb`'s bookkeeping: a mirror tick that
+        lands DURING the step (e.g. a COW zero-transition discovered at
+        absorb) moves the mirror past the planned value, so the next plan
+        validates again — conservative by construction."""
+        self._planned_clock = self.stats.warnings_fired
+        self._step_validates = self.policy.needs_validation(
+            self._planned_clock)
+        return self._step_validates
 
     def plan_chunk(self) -> tuple[int, int, dict | None]:
         """Pick the executable (C), the traced budget and the draft plan for
@@ -814,6 +861,15 @@ class Scheduler:
             if req.state != "running":
                 continue  # preempted mid-flight; its row is dead anyway
             i = req.slot
+            if (not self.policy.detects_stale_readers
+                    and req.externally_reclaimed):
+                # this policy runs no device validation pass (interval): an
+                # external reclaim is outside its free→grant discipline, so
+                # the stale reader is detected HERE, host-side — same
+                # restart surface as an OA validation failure
+                self.stats.record_restart()
+                self.preempt(req)
+                continue
             if not valid_np[i]:
                 if grant_np[i] < 0:
                     starved.append(req)  # stays running; retry after eviction
@@ -878,6 +934,13 @@ class Scheduler:
                 else:
                     self.spec_k_cap //= 2
             self.stats.record_spec_step(self.spec_k_cap)
+        # reclamation-policy bookkeeping: count the pass/skip, remember the
+        # epoch a validated step was planned at, advance the interval (the
+        # interval policy's limbo frees mature here, once per step)
+        self.stats.record_validation(self._step_validates)
+        if self._step_validates:
+            self.policy.on_validated(self._planned_clock)
+        self.policy.on_step()
         self.stats.record_step(chunked=C > 1 and self._planned_prefill)
         self._update_speed_model(committed_this_step)
         self.stats.record_backpressure(
@@ -922,20 +985,41 @@ class Scheduler:
                 else max(1, keep_superblocks))
         return self.kvm.shrink(keep)
 
+    def _release_threshold(self) -> int:
+        """Idle ticks required before the quiescence release fires.  Static
+        mode returns the configured floor unchanged; adaptive mode
+        (``release_quiescence="adaptive"``, Hyaline-style) tracks 1.5× the
+        EWMA of recent admit-burst inter-arrival gaps — regular bursts keep
+        capacity mapped (no release/remap thrash inside the cadence), a
+        genuine drain still releases once the gap outlasts the pattern."""
+        if not self._adaptive_release:
+            return int(self.release_quiescence)
+        if self._gap_ewma is None:
+            # no gap observed yet: stay conservative so the first regular
+            # cadence is LEARNED, not thrashed through release/remap
+            return self._adaptive_bootstrap
+        return max(self._adaptive_floor,
+                   int(self._gap_ewma * 1.5 + 0.999))
+
     def maintain(self) -> None:
-        """Quiescence-driven release tick: after ``release_quiescence``
+        """Quiescence-driven release tick: after ``_release_threshold()``
         pressure-free ticks, release capacity no running request can demand
         again — shared pages counted once, plus one page per row still
         sharing its write-position (tail) page, whose first divergent write
         grants a COW copy (omit that and a floor-exact shrink ping-pongs
-        with the growth path's remap)."""
+        with the growth path's remap).  With zero running rows, deferred
+        frees (interval limbo) are applied first — no reader is live, so
+        every interval guarantee is trivially satisfied and the release
+        arithmetic sees the true free state."""
+        if not self.running and self.policy.pending_frees():
+            self.policy.drain_pending()
         if self.release_quiescence is None:
             return
         if self.queue:
             self._idle_ticks = 0  # admission pressure: not quiescent
             return
         self._idle_ticks += 1
-        if self._idle_ticks < self.release_quiescence:
+        if self._idle_ticks < self._release_threshold():
             return
         self._idle_ticks = 0
         ps = self.page_size

@@ -23,6 +23,8 @@ def test_scan_trip_count_correction():
     assert abs(res["dot_flops"] - expected) / expected < 0.01
     # raw cost_analysis counts the body once — the analyzer must not
     ca = compiled.cost_analysis()
+    # jax < 0.5 returns a one-element list of dicts, newer jax a bare dict
+    ca = ca[0] if isinstance(ca, list) else ca
     assert ca["flops"] < res["dot_flops"]
 
 

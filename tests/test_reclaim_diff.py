@@ -1,0 +1,235 @@
+"""Differential testing of the reclamation backends (ISSUE 8 tentpole).
+
+Three policies share one serving stack (``core/reclaim_policy.py``):
+``oa-validate`` (per-step version validation — the paper's scheme),
+``epoch-grace`` (skip validation on steps whose epoch saw no reclamation)
+and ``interval`` (IBR-style: frees mature two intervals later, zero
+validation).  They are only trustworthy under a differential harness: the
+SAME mixed prefill / decode / preempt / finish workload — prefix sharing
+and speculation both on — must produce token-exact identical outputs,
+identical final committed-length mirrors and balanced refcount/clock
+accounting under every backend.  Greedy decoding makes this a strong
+oracle: any page handed out while a stale reader could still observe it
+changes that reader's KV, and the divergence shows up in the tokens.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.chaos import ChaosConfig
+from repro.core.reclaim_policy import POLICY_NAMES, make_policy
+from repro.core.vm import ReleaseStrategy
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+CFG = reduced(get_config("olmo-1b"))
+PAGE = 4
+SHARED = list(range(1, 11))  # ten-token common prefix (2.5 pages)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _engine(params, policy, **kw):
+    base = dict(num_pages=48, page_size=PAGE, max_batch=3,
+                max_pages_per_seq=12, prefix_cache=True, speculative_k=2,
+                prefill_chunk=2, release_quiescence=3,
+                release_strategy=ReleaseStrategy.MADVISE,
+                reclaim_policy=policy)
+    base.update(kw)
+    return PagedServingEngine(CFG, params, **base)
+
+
+def _drive_mixed(params, policy):
+    """The differential workload: chunked prefill over a shared prefix,
+    speculative decode, one deterministic mid-run preemption, a late burst
+    arriving while earlier requests still run, and a full drain."""
+    eng = _engine(params, policy)
+    reqs = [eng.submit(SHARED + [20 + i], 10) for i in range(3)]
+    eng._admit()
+    for _ in range(4):
+        eng.step()
+        eng._maintain()
+    # deterministic mid-run preemption of the youngest running request
+    victim = min(eng.running, key=lambda r: r.rid)
+    eng._preempt(victim)
+    # a late burst while the first wave still decodes
+    reqs += [eng.submit(SHARED + [30 + i], 8) for i in range(2)]
+    eng.run()
+    return eng, reqs
+
+
+def _outputs(reqs):
+    return [(r.prompt + r.generated, r.committed, r.state) for r in reqs]
+
+
+def test_token_exact_across_policies(params):
+    """The headline differential assertion: identical outputs, identical
+    final committed mirrors, every request finished, under all three
+    backends."""
+    results = {}
+    for pol in POLICY_NAMES:
+        eng, reqs = _drive_mixed(params, pol)
+        for r in reqs:
+            assert r.state == "finished", (pol, r.rid, r.state)
+            # the final sampled token is emitted, never KV-appended
+            assert r.committed == len(r.prompt) + r.max_new_tokens - 1
+        results[pol] = _outputs(reqs)
+    base = results["oa-validate"]
+    for pol in POLICY_NAMES:
+        assert results[pol] == base, (
+            f"{pol} diverged from oa-validate: {results[pol]} != {base}")
+
+
+@pytest.mark.parametrize("pol", POLICY_NAMES)
+def test_mirrors_and_refcounts_balanced(params, pol):
+    """After the drain (deferred frees flushed), the host clock mirror
+    equals the device clock exactly, and every remaining device reference
+    is accounted for by a prefix-cache pin — nothing leaked, nothing
+    double-freed, under every backend."""
+    eng, _ = _drive_mixed(params, pol)
+    assert eng.stats.warnings_fired == int(eng.pool.clock), pol
+    rc = np.asarray(eng.pool.page_refcount)
+    assert int(rc.sum()) == len(eng._cache_pages), (
+        f"{pol}: {int(rc.sum())} device refs vs "
+        f"{len(eng._cache_pages)} cache pins")
+    assert (rc[sorted(eng._cache_pages)] == 1).all()
+
+
+def test_validation_pass_accounting(params):
+    """The policies' defining behaviours, measured: OA validates every
+    step, epoch-grace skips the no-reclamation majority, interval never
+    validates."""
+    stats = {}
+    for pol in POLICY_NAMES:
+        eng, _ = _drive_mixed(params, pol)
+        stats[pol] = eng.stats
+        assert eng.stats.reclaim_policy == pol
+    oa = stats["oa-validate"]
+    assert oa.validation_skipped == 0
+    assert oa.validation_passes == oa.steps
+    eg = stats["epoch-grace"]
+    assert eg.validation_skipped > eg.validation_passes > 0
+    iv = stats["interval"]
+    assert iv.validation_passes == 0
+    assert iv.validation_skipped == iv.steps
+
+
+@pytest.mark.parametrize("pol", POLICY_NAMES)
+def test_external_reclaim_detected_under_every_policy(params, pol):
+    """The use-after-release race: a reclaimer frees a RUNNING row's pages.
+    OA catches it on the next validation pass; epoch-grace is forced to
+    validate because the reclaim ticked the epoch; interval runs no device
+    pass at all, so the scheduler restarts the row host-side.  Every
+    backend must restart the reader and still finish with the right
+    tokens."""
+    eng = _engine(params, pol, prefix_cache=False, speculative_k=0,
+                  prefill_chunk=1)
+    ref = _engine(params, "oa-validate", prefix_cache=False,
+                  speculative_k=0, prefill_chunk=1)
+    rr = ref.submit(SHARED, 8)
+    ref.run()
+    req = eng.submit(SHARED, 8)
+    eng._admit()
+    for _ in range(3):
+        eng.step()
+    eng.inject_external_reclaim(req)
+    eng.run()
+    assert req.state == "finished"
+    assert eng.stats.reader_restarts >= 1, pol
+    assert req.generated == rr.generated, pol
+
+
+@pytest.mark.parametrize("pol", POLICY_NAMES)
+def test_policies_survive_chaos_fault_schedule(params, pol):
+    """Every backend must absorb the chaos layer's grant denials and
+    delayed frees (composed UNDER the policy wrapper) and still drain the
+    workload token-exactly."""
+    chaos = ChaosConfig(seed=7, grant_denial_p=0.2, delayed_free_p=0.3,
+                        delay_ops=2)
+    ref = _engine(params, "oa-validate", chaos=None)
+    base = [ref.submit(SHARED + [40 + i], 8) for i in range(3)]
+    ref.run()
+    eng = _engine(params, pol, chaos=chaos)
+    reqs = [eng.submit(SHARED + [40 + i], 8) for i in range(3)]
+    eng.run(max_steps=4000)
+    for r, b in zip(reqs, base):
+        assert r.state == "finished", (pol, r.rid)
+        assert r.generated == b.generated, pol
+    assert eng.stats.warnings_fired == int(eng.pool.clock), pol
+
+
+def test_interval_defers_frees_until_maturity(params):
+    """A finished request's pages must NOT rejoin the device free list the
+    same step under interval: the wrapper parks the free batch and applies
+    it after the lag, visible as host-mirror warnings leading the device
+    clock until the next steps mature the batch."""
+    eng = _engine(params, "interval", prefix_cache=False, speculative_k=0)
+    a = eng.submit(SHARED, 2)  # finishes quickly
+    b = eng.submit(SHARED[:4], 12)  # keeps stepping afterwards
+    eng._admit()
+    lead = 0
+    for _ in range(40):
+        if not eng.running:
+            break
+        eng.step()
+        if a.state == "finished":
+            lead = max(lead, eng.stats.warnings_fired - int(eng.pool.clock))
+    assert a.state == "finished" and b.state == "finished"
+    assert lead >= 1, "free applied same-step: no deferral observed"
+    eng.reclaim_policy.flush()
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
+
+
+def test_unknown_policy_rejected(params):
+    """Typos fail loudly at engine build, not as silent OA fallback."""
+    with pytest.raises(ValueError, match="unknown reclaim policy"):
+        _engine(params, "epoch")
+    with pytest.raises(ValueError):
+        make_policy("ibr")
+
+
+# -- adaptive release threshold (Hyaline-style) ------------------------------
+
+
+def test_adaptive_release_keeps_capacity_under_regular_bursts(params):
+    """Bursts arriving on a cadence SHORTER than 1.5x their own gap EWMA
+    must not trigger release/remap thrash: the adaptive threshold rises
+    above the observed gap, so no superblock is released between bursts —
+    where a static floor of 2 would have released on every gap."""
+    eng = _engine(params, "oa-validate", prefix_cache=False,
+                  speculative_k=0, release_quiescence="adaptive")
+    for burst in range(3):
+        for i in range(2):
+            eng.submit(SHARED[:4], 6)
+        eng.run()
+        # idle gap of 4 maintain ticks between bursts (the cadence)
+        for _ in range(4):
+            eng._maintain()
+    # gap EWMA ~4 -> threshold 6 > the 4-tick gaps: nothing released
+    assert eng.scheduler._release_threshold() > 4
+    assert eng.stats.superblocks_released == 0
+    assert eng.stats.superblocks_remapped == 0
+
+
+def test_adaptive_release_fires_on_genuine_drain(params):
+    """Once the idle gap outlasts the learned cadence, the release fires
+    and the mapped watermark drops — adaptivity must not mean never."""
+    eng = _engine(params, "oa-validate", prefix_cache=False,
+                  speculative_k=0, release_quiescence="adaptive")
+    for burst in range(2):
+        for i in range(2):
+            eng.submit(SHARED, 6)
+        eng.run()
+        for _ in range(3):
+            eng._maintain()
+    threshold = eng.scheduler._release_threshold()
+    for _ in range(threshold + 2):  # a drain longer than the cadence
+        eng._maintain()
+    assert eng.stats.superblocks_released > 0
+    assert eng.stats.mapped_pages < eng.num_pages
+    assert eng.stats.warnings_fired == int(eng.pool.clock)
