@@ -143,6 +143,31 @@ def _checks(all_rows, crashed=()) -> bool:
               "faults", bool(r["sync_free_ok"]), "True",
               bool(r["sync_free_ok"]))
 
+    # overload / tail-latency gates (BENCH_traffic.json): under the
+    # reference bursty trace the interactive class must hold its p99 TTFT
+    # SLO (strict-priority admission through bursts), every arrival must be
+    # accounted for (finished / shed / rejected — never lost), and under
+    # sustained 2x overload the degradation ladder + bounded queues must
+    # keep goodput within budget instead of collapsing
+    tf = [r for r in all_rows
+          if r["bench"] == "traffic" and r["method"] == "tail_latency"]
+    if tf:
+        r = tf[0]
+        _gate(gates, f"traffic: interactive p99 TTFT within SLO on the "
+              f"reference bursty trace (got {r['interactive_p99_ttft_s']}s, "
+              f"SLO {r['slo_ttft_s']}s)", r["interactive_p99_ttft_s"],
+              f"<= {r['slo_ttft_s']}",
+              r["interactive_p99_ttft_s"] <= r["slo_ttft_s"])
+        _gate(gates, f"traffic: zero lost requests across reference + "
+              f"overload phases (got {r['lost']})", r["lost"], "== 0",
+              r["lost"] == 0)
+        _gate(gates, f"traffic: goodput >= {r['gate_threshold']}x capacity "
+              f"under sustained 2x overload (got {r['goodput_ratio']}x, "
+              f"ladder peak {r['degradation_level_peak']}, "
+              f"sheds {r['ladder_sheds']})", r["goodput_ratio"],
+              f">= {r['gate_threshold']}",
+              r["goodput_ratio"] >= r["gate_threshold"])
+
     # reclamation-matrix gates (BENCH_reclaim.json): the policies' defining
     # behaviours measured on one stack — epoch-grace must actually earn its
     # keep (>=90% of steady-state validation passes skipped), interval must
@@ -245,7 +270,7 @@ def main() -> None:
     from . import (chaos_goodput, decode_throughput, hash_table, linked_list,
                    memory_release, memory_release_device, multi_pool,
                    paged_attention_bench, prefix_cache, prefill_throughput,
-                   reclaim_matrix, speculative)
+                   reclaim_matrix, speculative, traffic)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -260,6 +285,7 @@ def main() -> None:
         (speculative, "speculative_decoding"),
         (multi_pool, "data_parallel_multi_pool"),
         (chaos_goodput, "chaos_goodput_self_healing"),
+        (traffic, "traffic_tail_latency"),
     ]
     if args.check:  # the BENCH-gated subset only
         suite = [
@@ -271,6 +297,7 @@ def main() -> None:
             (speculative, "speculative_decoding"),
             (multi_pool, "data_parallel_multi_pool"),
             (chaos_goodput, "chaos_goodput_self_healing"),
+            (traffic, "traffic_tail_latency"),
         ]
 
     all_rows = []

@@ -4,10 +4,19 @@ same workload with the refcounted prefix cache: every request carries the
 same 8-token system prompt, so later admissions share its KV pages
 (refcount += 1) and skip its prefill entirely.
 
+Two overload-era modes ride along (ISSUE 9): ``--stream`` drains through
+the streaming generator (tokens print as steps complete, not at drain
+end), and ``--trace`` replays a recorded two-class open-loop schedule
+against the wall clock — per-class tail latency is reported at the end.
+
 Run: PYTHONPATH=src python examples/serve_paged.py
 """
 
+import os
+import tempfile
+
 from repro.launch.serve import main
+from repro.serving import dump_trace, synthesize_trace
 
 BASE = ["--requests", "12", "--num-pages", "12", "--page-size", "8",
         "--max-batch", "4", "--prompt-len", "10", "--max-new", "20"]
@@ -19,3 +28,22 @@ if __name__ == "__main__":
     stats = main(BASE + ["--prefix-cache", "--shared-prefix", "8",
                          "--num-pages", "24"])
     assert stats.prefix_hits > 0, "shared prompts must hit the prefix index"
+    print("== streaming: tokens arrive as steps complete ==")
+    main(["--requests", "3", "--num-pages", "24", "--page-size", "8",
+          "--max-batch", "2", "--prompt-len", "8", "--max-new", "6",
+          "--stream", "--classes", "interactive:0.7,batch:0.3"])
+    print("== trace replay: two-class bursty schedule, open loop ==")
+    events = synthesize_trace(0, duration_s=2.0, rate_rps=6.0,
+                              process="bursty",
+                              class_mix={"interactive": 0.7, "batch": 0.3},
+                              prompt_mean=8, max_new_mean=6,
+                              prompt_cap=16, max_new_cap=8)
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        dump_trace(events, path)
+        stats = main(["--num-pages", "48", "--page-size", "8",
+                      "--max-batch", "4", "--trace", path])
+        assert stats.class_stats, "trace replay must report class stats"
+    finally:
+        os.unlink(path)

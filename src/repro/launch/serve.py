@@ -11,6 +11,21 @@ sharing counters (hits / tokens reused / COW copies) are reported.  With
 pool+runner replicas (one per jax device, cycling) behind the prefix-affine
 router, and the aggregated fleet counters are reported.
 
+Multi-tenant / overload extensions (ISSUE 9):
+
+- ``--classes "interactive:0.7,batch:0.3"`` draws each synthetic request's
+  service class from the given mix — per-class tail latency (p50/p95/p99
+  TTFT) is reported at the end.
+- ``--trace path.jsonl`` replays a recorded open-loop schedule (see
+  ``repro.serving.traffic``) against the wall clock instead of submitting
+  a closed-loop batch; arrivals never wait for a busy engine.
+- ``--stream`` drains through :meth:`PagedServingEngine.stream`, printing
+  tokens as steps complete instead of at drain end.
+
+All CLI validation (unknown class names, non-positive weights, malformed
+specs, unreadable traces) raises a clear ``ValueError`` BEFORE the model
+is built — a typo fails in milliseconds, not after a compile.
+
 Capacity note: ``max_pages_per_seq`` is derived from the ACTUAL prompt
 length through ``repro.serving.required_pages_per_seq`` — the worst-case
 block-table demand the scheduler exposes.  The old CLI-side arithmetic
@@ -23,14 +38,74 @@ real prompt is ``shared + tail``, longer than ``--prompt-len``), making
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serving import (DataParallelEngine, PagedServingEngine,
+from repro.serving import (DEFAULT_CLASSES, DataParallelEngine,
+                           PagedServingEngine, load_trace, replay_arrivals,
                            required_pages_per_seq)
+
+
+def parse_class_mix(spec: str) -> dict[str, float]:
+    """``"interactive:0.7,batch:0.3"`` -> ``{...}`` with clear errors:
+    unknown class names and non-positive weights are rejected here, before
+    any model work."""
+    mix: dict[str, float] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, w = part.partition(":")
+        name = name.strip()
+        if not sep:
+            raise ValueError(f"bad --classes entry {part!r}; "
+                             f"expected name:weight")
+        if name not in DEFAULT_CLASSES:
+            raise ValueError(f"unknown request class {name!r}; known "
+                             f"classes: {sorted(DEFAULT_CLASSES)}")
+        if name in mix:
+            raise ValueError(f"duplicate class {name!r} in --classes")
+        try:
+            weight = float(w)
+        except ValueError:
+            raise ValueError(f"bad --classes weight {w!r} for {name!r}; "
+                             f"expected a number") from None
+        if weight <= 0:
+            raise ValueError(f"--classes weight for {name!r} must be "
+                             f"positive, got {weight}")
+        mix[name] = weight
+    if not mix:
+        raise ValueError("--classes spec is empty")
+    return mix
+
+
+def _replay_trace(eng, events, vocab: int):
+    """Open-loop replay against the wall clock (arrivals never wait for
+    the engine), then drain; returns the submitted requests."""
+    reqs, cursor = [], 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        due, cursor = replay_arrivals(events, now, cursor)
+        for ev in due:
+            reqs.append(eng.submit(ev.prompt(vocab), ev.max_new, cls=ev.cls))
+        eng.scheduler.admit()
+        if eng.scheduler.running:
+            eng.step()
+            eng.scheduler.maintain()
+        elif eng.scheduler.queue:
+            if not eng._reclaim_policy.drain_pending():
+                raise MemoryError("trace replay wedged: queued work cannot "
+                                  "be admitted and nothing is running")
+        elif cursor < len(events):
+            time.sleep(min(0.005, max(0.0, events[cursor].t - now)))
+        else:
+            eng.stats.record_wall(time.perf_counter() - t0)
+            return reqs
 
 
 def main(argv: list[str] | None = None):
@@ -56,7 +131,39 @@ def main(argv: list[str] | None = None):
                     help="speculative decoding: up to K n-gram-drafted "
                          "tokens verified per fused dispatch (0 = off; "
                          "greedy only)")
+    ap.add_argument("--classes", default=None, metavar="SPEC",
+                    help="service-class mix for the synthetic workload, "
+                         "e.g. 'interactive:0.7,batch:0.3' (per-class tail "
+                         "latency is reported)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded JSONL trace open-loop against "
+                         "the wall clock (repro.serving.traffic format)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drain through the streaming generator, printing "
+                         "tokens as steps complete")
     args = ap.parse_args(argv)
+
+    # -- cheap validation first: fail on typos before any model work -----
+    mix = parse_class_mix(args.classes) if args.classes else None
+    events = None
+    if args.trace is not None:
+        if mix is not None:
+            raise ValueError("--classes has no effect with --trace (trace "
+                             "events carry their own classes); drop one")
+        if args.replicas > 1:
+            raise ValueError("--trace replay drives a single engine; "
+                             "it cannot be combined with --replicas > 1")
+        events = load_trace(args.trace)  # host-only, validates the file
+        if not events:
+            raise ValueError(f"trace {args.trace!r} contains no events")
+        for ev in events:
+            if ev.cls not in DEFAULT_CLASSES:
+                raise ValueError(f"trace {args.trace!r} uses unknown "
+                                 f"request class {ev.cls!r}; known "
+                                 f"classes: {sorted(DEFAULT_CLASSES)}")
+    if args.stream and args.replicas > 1:
+        raise ValueError("--stream drains a single engine; it cannot be "
+                         "combined with --replicas > 1")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -66,17 +173,22 @@ def main(argv: list[str] | None = None):
     params = model.init(jax.random.PRNGKey(args.seed))
 
     rng = np.random.default_rng(args.seed)
-    shared = rng.integers(0, cfg.vocab, (args.shared_prefix,)).tolist()
-    tail_len = max(1, args.prompt_len - args.shared_prefix)
-    prompts = [shared + rng.integers(0, cfg.vocab, (tail_len,)).tolist()
-               for _ in range(args.requests)]
-    # worst-case per-slot demand from the scheduler's own arithmetic — the
-    # REAL prompt length (shared + tail) can exceed --prompt-len
-    max_prompt = max(len(p) for p in prompts)
+    if events is not None:
+        max_prompt = max(ev.prompt_len for ev in events)
+        max_new = max(ev.max_new for ev in events)
+    else:
+        shared = rng.integers(0, cfg.vocab, (args.shared_prefix,)).tolist()
+        tail_len = max(1, args.prompt_len - args.shared_prefix)
+        prompts = [shared + rng.integers(0, cfg.vocab, (tail_len,)).tolist()
+                   for _ in range(args.requests)]
+        # worst-case per-slot demand from the scheduler's own arithmetic —
+        # the REAL prompt length (shared + tail) can exceed --prompt-len
+        max_prompt = max(len(p) for p in prompts)
+        max_new = args.max_new
     # + spec_k: a drafting row may hold up to K uncommitted (possibly
     # rejected) positions past max_new in its final step's grant
     pages_per_seq = required_pages_per_seq(max_prompt,
-                                           args.max_new + args.spec_k,
+                                           max_new + args.spec_k,
                                            args.page_size)
 
     engine_kw = dict(
@@ -89,10 +201,25 @@ def main(argv: list[str] | None = None):
                                  **engine_kw)
     else:
         eng = PagedServingEngine(cfg, params, **engine_kw)
-    reqs = [eng.submit(p, args.max_new) for p in prompts]
-    stats = eng.run()
-    done = sum(r.state == "finished" for r in reqs)
     label = (f"[serve x{args.replicas}]" if args.replicas > 1 else "[serve]")
+
+    if events is not None:
+        reqs = _replay_trace(eng, events, cfg.vocab)
+        stats = eng.stats
+    else:
+        classes = (rng.choice(sorted(mix), size=len(prompts),
+                              p=np.array([mix[k] for k in sorted(mix)])
+                              / sum(mix.values())).tolist()
+                   if mix else ["interactive"] * len(prompts))
+        reqs = [eng.submit(p, args.max_new, cls=c)
+                for p, c in zip(prompts, classes)]
+        if args.stream:
+            for req, new in eng.stream():
+                print(f"{label} r{req.rid} +{len(new)} tokens: {new}")
+            stats = eng.stats
+        else:
+            stats = eng.run()
+    done = sum(r.state == "finished" for r in reqs)
     print(f"{label} finished {done}/{len(reqs)} requests in {stats.steps} steps "
           f"({stats.wall_seconds:.2f}s, "
           f"{stats.tokens_committed / stats.wall_seconds:.1f} tok/s)")
@@ -111,7 +238,16 @@ def main(argv: list[str] | None = None):
               f"pages_allocated={stats.pages_allocated} "
               f"cache_pages={stats.prefix_cache_pages} "
               f"evictions={stats.prefix_evictions}")
-    assert done == len(reqs)
+    if mix is not None or events is not None:
+        for name, cs in sorted(stats.class_stats.items()):
+            p = cs.percentiles()
+            print(f"{label} class {name}: "
+                  f"finished={cs.finished}/{cs.submitted} shed={cs.shed} "
+                  f"rejected={cs.rejected} "
+                  f"ttft_p50={p['ttft_p50']:.3f}s "
+                  f"p95={p['ttft_p95']:.3f}s p99={p['ttft_p99']:.3f}s")
+    lost = sum(r.state not in ("finished", "shed", "rejected") for r in reqs)
+    assert lost == 0, f"{lost} requests neither finished nor accounted for"
     return stats
 
 

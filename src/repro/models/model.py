@@ -15,6 +15,7 @@ a time inside a scan) so the [B, S, vocab] fp32 logits tensor — which for a
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -67,20 +68,28 @@ def _chunked_ce(cfg, params, hidden, labels, mask):
 def build_model(cfg) -> Model:
     fam = cfg.family
 
+    # fwd_eval: the inference/teacher-forcing forward.  For MoE it runs the
+    # dropless dispatch so it is the SAME per-token function as prefill +
+    # decode_step (capacity drops are a training-only memory bound); the
+    # loss keeps the capacity-bounded fwd.
     if fam in ("dense", "moe", "vlm"):
         init, fwd = T.init_decoder_lm, T.decoder_forward
+        fwd_eval = functools.partial(T.decoder_forward, dropless=True)
         prefill, decode = T.decoder_prefill, T.decoder_decode_step
         init_cache = T.decoder_init_cache
     elif fam == "audio":
         init, fwd = T.init_encdec, T.encdec_forward
+        fwd_eval = T.encdec_forward
         prefill, decode = T.encdec_prefill, T.encdec_decode_step
         init_cache = T.encdec_init_cache
     elif fam == "hybrid":
         init, fwd = T.init_hybrid, T.hybrid_forward
+        fwd_eval = T.hybrid_forward
         prefill, decode = T.hybrid_prefill, T.hybrid_decode_step
         init_cache = T.hybrid_init_cache
     elif fam == "ssm":
         init, fwd = T.init_ssm_lm, T.ssm_forward
+        fwd_eval = T.ssm_forward
         prefill, decode = T.ssm_prefill, T.ssm_decode_step
         init_cache = T.ssm_init_cache
     else:
@@ -102,7 +111,7 @@ def build_model(cfg) -> Model:
     return Model(
         cfg=cfg,
         init=lambda rng: init(cfg, rng),
-        forward=lambda params, batch: fwd(cfg, params, batch),
+        forward=lambda params, batch: fwd_eval(cfg, params, batch),
         loss=loss_fn,
         prefill=lambda params, batch, n: prefill(cfg, params, batch, n),
         decode_step=lambda params, cache, batch: decode(cfg, params, cache, batch),

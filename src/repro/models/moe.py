@@ -10,6 +10,14 @@ cell past HBM in the v1 sweep (EXPERIMENTS.md §Perf, iteration 3).
 
 Capacity is per (batch row, chunk): C = ceil(chunk·k·cf / E).
 
+Capacity bounding is a TRAINING-time memory/compute bound (GShard): over-
+capacity assignments are dropped, which makes the grouped pass a different
+function of the inputs than single-token evaluation (a 1-token group has
+C >= k, so decode never drops).  Inference entry points therefore pass
+``dropless=True`` — C = chunk·k, every assignment kept — so teacher-forced,
+chunked-prefill, and one-token-decode evaluation all compute the same
+per-token function (the decode-parity contract in test_models_smoke).
+
 Shapes (per layer):
   router   [d, E]
   experts  w_gate/w_up [E, d, ff], w_down [E, ff, d]   (swiglu)
@@ -28,7 +36,9 @@ from repro.sharding.rules import shard_experts, shard_seq
 MOE_SEQ_CHUNK = 512
 
 
-def moe_capacity(cfg, group_len: int) -> int:
+def moe_capacity(cfg, group_len: int, dropless: bool = False) -> int:
+    if dropless:  # worst case: every assignment routed to one expert
+        return group_len * cfg.top_k
     return max(1, int(math.ceil(group_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts)))
 
 
@@ -88,12 +98,12 @@ def _combine(out, fe, sl, keepf):
     return core(out, fe, sl, keepf)
 
 
-def _moe_group(cfg, x, p):
+def _moe_group(cfg, x, p, dropless: bool = False):
     """One token group. x [B, S, d] -> (y [B, S, d], aux fp32)."""
     x = shard_seq(x)  # pin group inputs (and their cotangents) sharded
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    C = moe_capacity(cfg, S)
+    C = moe_capacity(cfg, S, dropless=dropless)
 
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_router"])
     probs = jax.nn.softmax(logits, axis=-1)  # [B,S,E]
@@ -141,16 +151,21 @@ def _moe_group(cfg, x, p):
     return y, aux
 
 
-def moe_apply(cfg, x, p, group: int = MOE_SEQ_CHUNK):
-    """x [B, S, d] -> (y [B, S, d], aux fp32).  Scans over token groups."""
+def moe_apply(cfg, x, p, group: int = MOE_SEQ_CHUNK, dropless: bool = False):
+    """x [B, S, d] -> (y [B, S, d], aux fp32).  Scans over token groups.
+
+    ``dropless=True`` sizes capacity at the worst case (no assignment ever
+    dropped) — required on every inference path so grouped and single-token
+    evaluation agree; training keeps the capacity bound for buffer memory.
+    """
     B, S, d = x.shape
     if S <= group or S % group != 0:
-        return _moe_group(cfg, x, p)
+        return _moe_group(cfg, x, p, dropless=dropless)
     ng = S // group
     xg = jnp.moveaxis(x.reshape(B, ng, group, d), 1, 0)
 
     def body(_, xc):
-        y, aux = _moe_group(cfg, xc, p)
+        y, aux = _moe_group(cfg, xc, p, dropless=dropless)
         return None, (y, aux)
 
     _, (ys, auxs) = jax.lax.scan(body, None, xg)

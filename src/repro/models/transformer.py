@@ -103,7 +103,7 @@ def init_decoder_block(cfg, key):
     return p
 
 
-def _decoder_block_fwd(cfg, x, blk, positions, prefix_len):
+def _decoder_block_fwd(cfg, x, blk, positions, prefix_len, dropless=False):
     x = shard_seq(x)  # sequence-parallel residual stream (Megatron-SP)
     h = apply_norm(cfg, x, blk["ln1"])
     q, k, v = attention_qkv(cfg, h, blk["attn"], positions)
@@ -118,7 +118,7 @@ def _decoder_block_fwd(cfg, x, blk, positions, prefix_len):
     x = x + att.reshape(*x.shape[:2], -1) @ blk["attn"]["wo"]
     h2 = apply_norm(cfg, x, blk["ln2"])
     if cfg.moe:
-        y, aux = moe_lib.moe_apply(cfg, h2, blk["moe"])
+        y, aux = moe_lib.moe_apply(cfg, h2, blk["moe"], dropless=dropless)
     else:
         y, aux = mlp_apply(cfg, h2, blk["mlp"]), jnp.zeros((), jnp.float32)
     return x + y, aux
@@ -126,8 +126,12 @@ def _decoder_block_fwd(cfg, x, blk, positions, prefix_len):
 
 
 
-def decoder_forward(cfg, params, batch):
-    """-> (hidden [B,S,d], aux_loss). S includes the VLM prefix if present."""
+def decoder_forward(cfg, params, batch, dropless=False):
+    """-> (hidden [B,S,d], aux_loss). S includes the VLM prefix if present.
+
+    ``dropless``: size MoE capacity so no assignment is dropped — the
+    inference/teacher-forcing mode that matches prefill + decode_step
+    exactly; the training loss keeps the capacity-bounded default."""
     tokens = batch["tokens"]
     B, St = tokens.shape
     prefix_len = 0
@@ -141,7 +145,8 @@ def decoder_forward(cfg, params, batch):
     pos_all = jnp.arange(S)
 
     def layer(x, blk):
-        x, aux = _decoder_block_fwd(cfg, x, blk, pos_all, prefix_len)
+        x, aux = _decoder_block_fwd(cfg, x, blk, pos_all, prefix_len,
+                                    dropless=dropless)
         return x, aux
 
     x, auxs = jax.lax.scan(_maybe_remat(cfg, layer), x, params["blocks"])
@@ -188,7 +193,7 @@ def decoder_prefill(cfg, params, batch, cache_size):
         x = x + att.reshape(B, S, -1) @ blk["attn"]["wo"]
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
-            y, _ = moe_lib.moe_apply(cfg, h2, blk["moe"])
+            y, _ = moe_lib.moe_apply(cfg, h2, blk["moe"], dropless=True)
         else:
             y = mlp_apply(cfg, h2, blk["mlp"])
         return x + y, (k, v)
@@ -228,7 +233,7 @@ def decoder_decode_step(cfg, params, cache, batch):
         x = x + att.reshape(B, 1, -1) @ blk["attn"]["wo"]
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
-            y, _ = moe_lib.moe_apply(cfg, h2, blk["moe"])
+            y, _ = moe_lib.moe_apply(cfg, h2, blk["moe"], dropless=True)
         else:
             y = mlp_apply(cfg, h2, blk["mlp"])
         return x + y, (kc, vc)

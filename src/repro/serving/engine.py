@@ -66,6 +66,11 @@ class PagedServingEngine:
                  speculative_k: int = 0,
                  drafter=None,
                  spec_probe_interval: int = 16,
+                 classes: dict | None = None,
+                 max_queue_depth: int | None = None,
+                 victim_policy="youngest",
+                 ladder=None,
+                 clock=None,
                  device=None):
         self.cfg = cfg
         self.page_size = page_size
@@ -116,17 +121,38 @@ class PagedServingEngine:
                 grant_retry_limit=grant_retry_limit, greedy=greedy,
                 speculative_k=speculative_k, drafter=drafter,
                 spec_probe_interval=spec_probe_interval,
-                reclaim_policy=policy)
+                reclaim_policy=policy, classes=classes,
+                max_queue_depth=max_queue_depth,
+                victim_policy=victim_policy, ladder=ladder, clock=clock)
 
     # -- scheduling (delegates to the policy layer) --------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int,
-               deadline: float | None = None) -> Request:
+               deadline: float | None = None, cls: str = "interactive",
+               block: bool = False) -> Request:
         """Queue a request (host-only; rejects degenerate and over-capacity
         inputs; ``deadline`` in relative seconds enables admission-time
-        shedding — see :meth:`Scheduler.submit`)."""
-        return self.scheduler.submit(prompt, max_new_tokens,
-                                     deadline=deadline)
+        shedding — see :meth:`Scheduler.submit`).
+
+        When ``cls``'s bounded admission queue is full the request comes
+        back with state ``"rejected"`` (explicit backpressure).  With
+        ``block=True`` the engine instead drives admit/step/maintain rounds
+        until the queue drains enough to accept it — the caller blocks, the
+        queue still never grows past its bound."""
+        req = self.scheduler.submit(prompt, max_new_tokens,
+                                    deadline=deadline, cls=cls)
+        while block and req.state == "rejected":
+            self.scheduler.admit()
+            if not self.scheduler.running:
+                if not self._reclaim_policy.drain_pending():
+                    raise MemoryError(
+                        "blocking submit: queue full and nothing running — "
+                        "the engine cannot make progress to drain it")
+            else:
+                self.step()
+            self.scheduler.maintain()
+            self.scheduler.requeue(req)
+        return req
 
     def step(self, *, inject_preemption_of: Request | None = None) -> None:
         """One batched decode/prefill step: the scheduler plans the chunk,
@@ -195,6 +221,42 @@ class PagedServingEngine:
             self.shrink()
         self.stats.record_wall(time.time() - t0)
         return self.stats
+
+    def stream(self, max_steps: int = 10_000):
+        """Streaming drain: the same admit/step/maintain loop as
+        :meth:`run`, but a GENERATOR yielding ``(request, new_tokens)``
+        after every step that committed generated tokens — tokens reach the
+        caller as steps complete instead of at drain end.  Structurally
+        identical to :meth:`run` (one fused dispatch, one ``device_get``
+        per step; yields are pure host reads of the mirrors), so the
+        sync-free invariant holds with a streaming consumer attached."""
+        t0 = time.time()
+        emitted: dict[int, int] = {}  # rid -> tokens already yielded
+        for _ in range(max_steps):
+            self.scheduler.admit()
+            if not self.scheduler.running and not self.scheduler.queue:
+                break
+            if not self.scheduler.running:  # queue blocked on memory
+                if self._reclaim_policy.drain_pending():
+                    continue
+                raise MemoryError("pool exhausted with empty running set")
+            watch = list(self.scheduler.running)
+            self.step()
+            for req in watch:
+                # emit past the per-request high-water mark only: after a
+                # preemption restart the row regenerates tokens the consumer
+                # already saw (identical under greedy) — don't re-emit them
+                seen = emitted.get(req.rid, 0)
+                if len(req.generated) > seen:
+                    yield req, req.generated[seen:]
+                    emitted[req.rid] = len(req.generated)
+            self.scheduler.maintain()
+        if not self.scheduler.running:
+            self._reclaim_policy.flush()
+        if (self.scheduler.release_quiescence is not None
+                and not self.scheduler._adaptive_release):
+            self.shrink()
+        self.stats.record_wall(time.time() - t0)
 
     def shrink(self, keep_superblocks: int | None = None) -> int:
         """Release every EMPTY superblock above the floor (maintenance sync

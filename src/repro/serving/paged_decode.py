@@ -135,7 +135,9 @@ def _chunk_core(params, kv, block_tables, lengths, tokens, n_new, *, cfg,
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
             from repro.models.moe import moe_apply
-            y, _ = moe_apply(cfg, h2, blk["moe"])
+            # dropless: the serving path must compute the same per-token
+            # function regardless of chunk width (decode-parity contract)
+            y, _ = moe_apply(cfg, h2, blk["moe"], dropless=True)
         else:
             y = mlp_apply(cfg, h2, blk["mlp"])
         return x + y, (kl, vl)

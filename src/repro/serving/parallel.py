@@ -149,12 +149,14 @@ class DataParallelEngine:
         return best
 
     def submit(self, prompt: list[int], max_new_tokens: int,
-               deadline: float | None = None) -> Request:
+               deadline: float | None = None, cls: str = "interactive",
+               block: bool = False) -> Request:
         """Route and queue one request; returns the replica's Request
         handle (its ``_engine`` back-reference names the owning replica,
-        which is how the tests pin no-cross-pool-leakage)."""
+        which is how the tests pin no-cross-pool-leakage).  ``cls`` and
+        ``block`` pass through to the replica's bounded-queue admission."""
         return self.replicas[self.route(prompt)].submit(
-            prompt, max_new_tokens, deadline=deadline)
+            prompt, max_new_tokens, deadline=deadline, cls=cls, block=block)
 
     # -- stepping ------------------------------------------------------------
 

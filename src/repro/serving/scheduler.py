@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from collections import deque
 
 import numpy as np
 
@@ -31,6 +30,8 @@ from repro.core.reclaim_policy import ReclamationPolicy, make_policy
 from repro.core.vm import superblock_floor
 from .draft import NGramDrafter
 from .kv_manager import KVCacheManager
+from .overload import (DEFAULT_CLASSES, ClassQueues, DegradationLadder,
+                       LadderConfig, VICTIM_POLICIES)
 from .stats import EngineStats
 
 
@@ -59,10 +60,14 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     committed: int = 0  # tokens (prompt+generated) whose KV is committed
     restarts: int = 0
-    state: str = "queued"  # queued | running | finished | shed
-    # SLO: absolute wall-clock deadline (None = best effort).  A request
-    # that provably cannot finish in time is SHED at admission — never
-    # mid-decode, where its pages and committed KV would be wasted work.
+    state: str = "queued"  # queued | running | finished | shed | rejected
+    # multi-tenant service class (overload.py); routes the request into its
+    # class's bounded admission queue and its SLO reservoirs
+    cls: str = "interactive"
+    # SLO: absolute deadline on the scheduler's monotonic clock (None =
+    # best effort).  A request that provably cannot finish in time is SHED
+    # at admission — never mid-decode, where its pages and committed KV
+    # would be wasted work.
     deadline: float | None = None
     # failover: tokens generated on a replica that died; the re-prefill
     # replays them as prompt, so ``generated`` restarts empty on the
@@ -70,10 +75,11 @@ class Request:
     migrated_prefix: list[int] = dataclasses.field(default_factory=list)
     migrations: int = 0  # how many replica failures this request survived
     # time-to-first-token accounting (chunked prefill's headline metric)
-    submitted_at: float = 0.0  # wall clock at submit()
+    submitted_at: float = 0.0  # scheduler clock at submit()
     admitted_step: int | None = None  # engine step count at FIRST admission
-    first_token_at: float | None = None  # wall clock at first generated token
+    first_token_at: float | None = None  # clock at first generated token
     first_token_step: int | None = None  # engine step that produced it
+    _last_token_t: float | None = None  # clock at last token (ITL stream)
     slot: int | None = None  # batch row while running
     pages_held: int = 0  # host-side page COUNT (ids live on device)
     externally_reclaimed: bool = False  # a reclaimer raced us and owns the pages
@@ -326,9 +332,18 @@ class Scheduler:
                  grant_retry_limit: int = 8, greedy: bool = True,
                  speculative_k: int = 0, drafter=None,
                  spec_probe_interval: int = 16,
-                 reclaim_policy: ReclamationPolicy | None = None):
+                 reclaim_policy: ReclamationPolicy | None = None,
+                 classes: dict | None = None,
+                 max_queue_depth: int | None = None,
+                 victim_policy="youngest",
+                 ladder: DegradationLadder | LadderConfig | bool | None = None,
+                 clock=None):
         self.kvm = kvm
         self.stats = stats
+        # the scheduler's one clock: monotonic by default (deadlines and
+        # speed samples must not jump with NTP/wall adjustments); injectable
+        # for deterministic tests
+        self.clock = clock if clock is not None else time.monotonic
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_batch = max_batch
@@ -388,7 +403,42 @@ class Scheduler:
         self.sec_per_token: float | None = None
         self._last_step_t: float | None = None
         self._speed_warmup = 2  # first steps pay jit compiles; skip them
-        self.queue: deque[Request] = deque()
+        # multi-tenant admission: per-class bounded FIFOs drained in strict
+        # priority order; a full class queue REJECTS at submit (explicit
+        # backpressure) instead of growing unboundedly.  max_queue_depth =
+        # None keeps the historical unbounded single-tenant behaviour.
+        self.classes = dict(classes) if classes else dict(DEFAULT_CLASSES)
+        self.queue: ClassQueues = ClassQueues(self.classes, max_queue_depth)
+        if callable(victim_policy):
+            self.victim_policy = victim_policy
+        elif victim_policy in VICTIM_POLICIES:
+            self.victim_policy = VICTIM_POLICIES[victim_policy]
+        else:
+            raise ValueError(
+                f"unknown victim_policy {victim_policy!r}; known policies: "
+                f"{sorted(VICTIM_POLICIES)} (or pass a callable "
+                f"(scheduler, candidates) -> Request)")
+        # graceful-degradation ladder (overload.py): None/False = off,
+        # True = defaults, or a LadderConfig / prebuilt DegradationLadder
+        if isinstance(ladder, DegradationLadder):
+            self.ladder = ladder
+        elif isinstance(ladder, LadderConfig):
+            self.ladder = DegradationLadder(ladder)
+        elif ladder is True:
+            self.ladder = DegradationLadder()
+        elif ladder in (None, False):
+            self.ladder = None
+        else:
+            raise ValueError(f"ladder must be None/bool/LadderConfig/"
+                             f"DegradationLadder, got {ladder!r}")
+        self._ladder_chunk_cap: int | None = None  # rung 1's chunk ceiling
+        self._ladder_spec_off = False  # rung 2: drafts forced to zero
+        # real-arrival-gap tracking for the adaptive release threshold:
+        # seconds-per-maintain-tick EWMA converts wall gaps between admit
+        # bursts into the tick units _release_threshold compares against
+        self._last_arrival_t: float | None = None
+        self._last_tick_t: float | None = None
+        self._sec_per_tick: float | None = None
         self.running: list[Request] = []
         self._idle_ticks = 0
         self._next_rid = itertools.count(1000)
@@ -397,20 +447,28 @@ class Scheduler:
     # -- submission ----------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int,
-               deadline: float | None = None) -> Request:
+               deadline: float | None = None,
+               cls: str = "interactive") -> Request:
         """Queue a request (host-only; no device work until admission).
 
         Degenerate inputs — an empty prompt, a non-positive or non-int
-        generation budget, non-int token ids — are rejected HERE with a
-        clear ``ValueError`` instead of failing deep inside the fused step,
-        and over-long requests likewise: replay positions beyond the slot's
-        KV capacity would hit the fused step's defensive clamp and generate
-        garbage.  (``MemoryError`` for pool-wide exhaustion still comes
-        from admission — this guard is per-slot, knowable at submit.)
+        generation budget, non-int token ids, an unknown service class —
+        are rejected HERE with a clear ``ValueError`` instead of failing
+        deep inside the fused step, and over-long requests likewise: replay
+        positions beyond the slot's KV capacity would hit the fused step's
+        defensive clamp and generate garbage.  (``MemoryError`` for
+        pool-wide exhaustion still comes from admission — this guard is
+        per-slot, knowable at submit.)
 
-        ``deadline`` is RELATIVE seconds from now; a request the admission
-        estimator judges unable to finish in time is shed at admission
-        (state ``"shed"``), never mid-decode."""
+        ``deadline`` is RELATIVE seconds from now (scheduler monotonic
+        clock); a request the admission estimator judges unable to finish
+        in time is shed at admission (state ``"shed"``), never mid-decode.
+
+        BACKPRESSURE: when ``cls``'s bounded queue is full the request is
+        returned with state ``"rejected"`` and is NOT enqueued — the queue
+        never grows without bound.  Callers either retry later or use the
+        engine facade's blocking submit, which drives steps until space
+        frees."""
         if self.speculative_k > 0 and not self.greedy:
             raise ValueError(
                 "speculative decoding requires greedy sampling: the accept "
@@ -443,22 +501,59 @@ class Scheduler:
                 f"(max_pages_per_seq={self.kvm.max_pages_per_seq} × "
                 f"page_size={self.page_size}); split the prompt or raise "
                 f"max_pages_per_seq")
-        now = time.time()
+        if cls not in self.classes:
+            raise ValueError(
+                f"unknown request class {cls!r}; configured classes: "
+                f"{sorted(self.classes)}")
+        now = self.clock()
         req = Request(rid=next(self._next_rid), prompt=prompt,
                       max_new_tokens=max_new_tokens, _engine=self._engine,
-                      submitted_at=now,
+                      submitted_at=now, cls=cls,
                       deadline=None if deadline is None
                       else now + float(deadline))
+        if self.queue.full(cls):
+            # bounded queue: refuse loudly rather than queue unboundedly
+            req.state = "rejected"
+            self.stats.record_rejection(cls)
+            return req
+        self._note_arrival(now)
+        self.queue.append(req)
+        self.stats.record_class_submit(cls)
+        return req
+
+    def requeue(self, req: Request) -> bool:
+        """Second chance for a ``"rejected"`` request: enqueue it if its
+        class queue has drained below its bound (the engine's blocking
+        submit drives steps between attempts).  Returns success."""
+        if self.queue.full(req.cls):
+            return False
+        req.state = "queued"
+        self._note_arrival(self.clock())
+        self.queue.append(req)
+        self.stats.record_class_submit(req.cls)
+        return True
+
+    def _note_arrival(self, now: float) -> None:
+        """Fold the gap since the last admit burst into the EWMA the
+        adaptive release threshold tracks (Hyaline-style).  The gap is
+        measured on the REAL clock when a tick cadence is known — the
+        seconds since the last arrival, converted through the measured
+        seconds-per-maintain-tick — and falls back to counted queue-empty
+        ticks otherwise (deterministic closed-loop drivers have no usable
+        wall cadence).  Only a burst that ENDED a queue-empty stretch
+        counts; the rest of the burst folds nothing."""
         if self._idle_ticks > 0:
-            # a burst ended a queue-empty stretch: fold its length into the
-            # EWMA the adaptive release threshold tracks (Hyaline-style),
-            # and zero the counter so the rest of this burst folds nothing
             g = float(self._idle_ticks)
+            if (self._sec_per_tick is not None and self._sec_per_tick > 0
+                    and self._last_arrival_t is not None):
+                # ceiling: a driver pause (engine not ticking) must not
+                # poison the cadence with one unbounded sample
+                g = min((now - self._last_arrival_t) / self._sec_per_tick,
+                        10.0 * self._adaptive_bootstrap)
             self._gap_ewma = (g if self._gap_ewma is None
                               else 0.7 * self._gap_ewma + 0.3 * g)
             self._idle_ticks = 0
-        self.queue.append(req)
-        return req
+        self._last_arrival_t = now
 
     # -- pressure arithmetic (host mirrors only) -----------------------------
 
@@ -483,7 +578,7 @@ class Scheduler:
         chunk — charging the configured chunk would over-reserve after a
         backoff."""
         ps = self.page_size
-        chunk = max(1, min(self.prefill_chunk, self.chunk_budget_cap))
+        chunk = max(1, self._chunk_cap())
         if r.committed < len(r.prompt) and chunk > 1:
             n_next = min(chunk, len(r.prompt) - r.committed)
         else:
@@ -532,8 +627,7 @@ class Scheduler:
             used = self.distinct_pages_in_use()
             need_now = sum(self.pages_needed_next_step(r)
                            for r in self.running)
-            n_first = min(max(1, min(self.prefill_chunk,
-                                     self.chunk_budget_cap)),
+            n_first = min(max(1, self._chunk_cap()),
                           len(req.prompt) - m)
             held_after = len(shared) + (1 if need_fresh else 0)
             first_need = max(0, (m + n_first - 1) // ps + 1 - held_after)
@@ -616,7 +710,7 @@ class Scheduler:
         its pages and committed KV are sunk cost worth finishing."""
         if req.deadline is None:
             return False
-        remaining = req.deadline - time.time()
+        remaining = req.deadline - self.clock()
         est = (0.0 if self.sec_per_token is None
                else (req.target_len - req.committed) * self.sec_per_token)
         if remaining > 0 and est <= remaining:
@@ -624,7 +718,7 @@ class Scheduler:
         assert self.queue[0] is req
         self.queue.popleft()
         req.state = "shed"
-        self.stats.record_shed()
+        self.stats.record_shed(cls=req.cls)
         return True
 
     def _unshare_admission(self, shared: list[int]) -> None:
@@ -640,11 +734,15 @@ class Scheduler:
     # -- preemption / release ------------------------------------------------
 
     def pick_victim(self, exclude: Request | None = None):
-        """Youngest running request (least committed work lost) — LIFO."""
+        """Dispatch to the configured victim policy (overload.py's
+        ``VICTIM_POLICIES``): ``"youngest"`` loses the least committed
+        work (PR 4's LIFO), ``"deadline"`` spares the requests closest to
+        missing their SLO.  Every preemption path routes through here so a
+        policy swap changes ALL victim choices."""
         cands = [r for r in self.running if r is not exclude]
         if not cands:
             return None
-        return min(cands, key=lambda r: r.committed)
+        return self.victim_policy(self, cands)
 
     def preempt(self, victim: Request) -> None:
         """OPTIMISTIC free: pages are reclaimed immediately — any in-flight
@@ -692,10 +790,11 @@ class Scheduler:
 
     def pick_victim_and_preempt(self, starved: list[Request]) -> bool:
         """Unblock ``starved`` rows: remap released superblocks first (costs
-        no one anything), then evict cache pages, then preempt the YOUNGEST
-        running request overall — the most committed row is never the
-        victim, so the batch's leader always makes progress and preemption
-        cannot ping-pong under chunked growth."""
+        no one anything), then evict cache pages, then preempt the victim
+        the configured policy picks (default youngest overall — the most
+        committed row is never the victim, so the batch's leader always
+        makes progress and preemption cannot ping-pong under chunked
+        growth; ``"deadline"`` trades that for SLO awareness)."""
         if self.kvm.remap_for(len(starved)):
             return True
         if self.prefix_cache and self.index.evict(len(starved)) > 0:
@@ -704,7 +803,7 @@ class Scheduler:
             return False
         if self.policy.pending_frees():
             return False  # limbo frees mature within the lag; retry then
-        self.preempt(min(self.running, key=lambda r: r.committed))
+        self.preempt(self.pick_victim())
         return True
 
     def inject_external_reclaim(self, req: Request) -> None:
@@ -731,6 +830,8 @@ class Scheduler:
         self-predictive again can re-open the throttle."""
         if self.speculative_k <= 0 or not self.greedy:
             return 0
+        if self._ladder_spec_off:
+            return 0  # rung 2: drafting is pure overhead under overload
         if self.spec_k_cap > 0:
             return self.spec_k_cap
         self._spec_probe += 1
@@ -798,8 +899,9 @@ class Scheduler:
     def _prefill_budget(self, C: int, n_prefill: int) -> int:
         """Sarathi budget for the prefilling rows of a C-wide step: one
         token reserved per decoding row, the rest split across prefills,
-        clipped by the AIMD chunk cap (1 when no row is prefilling — the
-        budget only shapes prefill chunks)."""
+        clipped by the AIMD chunk cap and the degradation ladder's rung-1
+        ceiling (1 when no row is prefilling — the budget only shapes
+        prefill chunks)."""
         if not n_prefill:
             return 1
         if self.token_budget is None:
@@ -808,7 +910,15 @@ class Scheduler:
             n_decode = len(self.running) - n_prefill
             budget = max(1, min(
                 C, (self.token_budget - n_decode) // n_prefill))
-        return max(1, min(budget, self.chunk_budget_cap))
+        return max(1, min(budget, self._chunk_cap()))
+
+    def _chunk_cap(self) -> int:
+        """The chunk budget ceiling in force: the AIMD cap, further clipped
+        by the degradation ladder's rung 1 while it is engaged."""
+        cap = min(self.prefill_chunk, self.chunk_budget_cap)
+        if self._ladder_chunk_cap is not None:
+            cap = min(cap, self._ladder_chunk_cap)
+        return cap
 
     def absorb(self, res, C: int, budget: int,
                inject_preemption_of: Request | None = None,
@@ -857,6 +967,7 @@ class Scheduler:
 
         starved: list[Request] = []
         step_drafted = step_accepted = 0
+        step_t = self.clock()  # one host clock read serves every row's ITL
         for req in list(self.running):
             if req.state != "running":
                 continue  # preempted mid-flight; its row is dead anyway
@@ -896,12 +1007,21 @@ class Scheduler:
                     step_accepted += acc
                     self.stats.record_speculation(len(row_drafts), acc)
                     req.generated.extend(row_drafts[:acc] + [int(tok_np[i])])
+                    n_new = acc + 1
                 else:
                     req.generated.append(int(tok_np[i]))
+                    n_new = 1
                 if req.first_token_step is None:
                     self._record_ttft(req)
+                elif req._last_token_t is not None:
+                    # streaming inter-token latency: this step's wall gap
+                    # amortised over the tokens the row committed
+                    self.stats.record_itl(
+                        req.cls, (step_t - req._last_token_t) / n_new)
+                req._last_token_t = step_t
             if len(req.generated) >= req.max_new_tokens:
                 req.state = "finished"
+                self.stats.record_class_finish(req.cls)
                 self.running.remove(req)
                 # retire: donate committed pages to the prefix index (cache
                 # on) or fire the warning and free (cache off)
@@ -943,11 +1063,48 @@ class Scheduler:
         self.policy.on_step()
         self.stats.record_step(chunked=C > 1 and self._planned_prefill)
         self._update_speed_model(committed_this_step)
+        pool_pressure = (self.distinct_pages_in_use()
+                         / max(1, self.kvm.mapped_pages))
         self.stats.record_backpressure(
-            pressure=(self.distinct_pages_in_use()
-                      / max(1, self.kvm.mapped_pages)),
+            pressure=pool_pressure,
             aimd=self.chunk_budget_cap / max(1, self.prefill_chunk),
             queue_depth=len(self.queue))
+        if self.ladder is not None:
+            self._tick_ladder(pool_pressure)
+
+    def _tick_ladder(self, pool_pressure: float) -> None:
+        """Fold one step's pressure into the degradation ladder and apply
+        whatever level it settles on.  Pressure is the WORSE of pool
+        occupancy and queue backlog (depth over the soft limit) — either
+        signal alone can mean overload.  Pure host policy: every rung turns
+        a knob the scheduler already owns, so the fused dispatch and its
+        single ``device_get`` per step are untouched."""
+        soft = max(1, self.ladder.config.queue_soft_limit)
+        pressure = max(pool_pressure, len(self.queue) / soft)
+        prev = self.ladder.level
+        level = self.ladder.observe(pressure)
+        if level != prev:
+            self.stats.record_ladder(level)
+        # rung 1: halve the chunk-budget ceiling — prefill bursts stop
+        # monopolising the token budget and the page pool
+        self._ladder_chunk_cap = (max(1, self.prefill_chunk // 2)
+                                  if level >= 1 else None)
+        # rung 2: speculative drafts to zero — rejected drafts burn pages
+        # and dispatch width the overloaded pool cannot spare
+        self._ladder_spec_off = level >= 2
+        # rung 3: evict the prefix cache — cached pages are a latency
+        # optimisation, and under overload they are the cheapest capacity
+        if level >= 3 and self.prefix_cache and self.index.pages:
+            self.index.evict(need_pages=len(self.index.pages))
+        # rung 4: shed queued work, lowest class first, newest first —
+        # ONLY queued requests (running KV is sunk cost worth finishing)
+        if level >= 4:
+            while len(self.queue) > soft:
+                victim = self.queue.shed_lowest()
+                if victim is None:
+                    break
+                victim.state = "shed"
+                self.stats.record_shed(cls=victim.cls, by_ladder=True)
 
     def _update_speed_model(self, committed: int) -> None:
         """Fold one step's wall time into the EWMA seconds-per-token the
@@ -955,7 +1112,7 @@ class Scheduler:
         mean are dropped — they are compile or pause artifacts, and folding
         one in would make admission shed half the queue after every
         recompile."""
-        now = time.time()
+        now = self.clock()
         last, self._last_step_t = self._last_step_t, now
         if last is None or committed <= 0:
             return
@@ -972,9 +1129,9 @@ class Scheduler:
         """First generated token landed: freeze the request's TTFT and fold
         it into the stats means.  A restarted request keeps its original
         submit time — restarts are latency the user saw."""
-        req.first_token_at = time.time()
+        req.first_token_at = self.clock()
         req.first_token_step = self.stats.steps + 1  # steps increments at end
-        self.stats.record_ttft(req.ttft_steps, req.ttft_seconds)
+        self.stats.record_ttft(req.ttft_steps, req.ttft_seconds, cls=req.cls)
 
     # -- physical release policy ---------------------------------------------
 
@@ -1013,6 +1170,18 @@ class Scheduler:
         arithmetic sees the true free state."""
         if not self.running and self.policy.pending_frees():
             self.policy.drain_pending()
+        # measure the maintain-tick cadence on the real clock so admit-gap
+        # seconds can be converted into tick units (see _note_arrival);
+        # EWMA, outlier-clipped like the speed model
+        now = self.clock()
+        last, self._last_tick_t = self._last_tick_t, now
+        if last is not None:
+            dt = now - last
+            if dt > 0 and (self._sec_per_tick is None
+                           or dt < 5 * self._sec_per_tick):
+                self._sec_per_tick = (dt if self._sec_per_tick is None
+                                      else self._sec_per_tick
+                                      + 0.2 * (dt - self._sec_per_tick))
         if self.release_quiescence is None:
             return
         if self.queue:

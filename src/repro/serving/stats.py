@@ -19,9 +19,90 @@ reclamation — the same once-per-batch rule the pool's ``clock`` follows.
 from __future__ import annotations
 
 import dataclasses
+import random
 
 from repro.core.allocator import AllocatorView
 from repro.core.vm import ReleaseStrategy
+
+
+class LatencyReservoir:
+    """Fixed-size uniform reservoir for streaming latency percentiles.
+
+    Algorithm R (Vitter): the first ``cap`` samples are kept verbatim, each
+    later sample replaces a uniformly random slot with probability
+    ``cap/seen``.  Deterministic via a seeded private ``random.Random`` so
+    benchmark gates are replayable.  Host-only, O(cap) memory regardless of
+    trace length; percentiles are nearest-rank over the sorted sample."""
+
+    def __init__(self, cap: int = 1024, seed: int = 0):
+        self.cap = cap
+        self.seen = 0
+        self.samples: list[float] = []
+        self._rng = random.Random(seed)
+
+    def add(self, value: float) -> None:
+        """Fold one observation in (class docstring: Algorithm R)."""
+        self.seen += 1
+        if len(self.samples) < self.cap:
+            self.samples.append(value)
+        else:
+            j = self._rng.randrange(self.seen)
+            if j < self.cap:
+                self.samples[j] = value
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile of the held sample (``q`` in [0, 100]);
+        0.0 when empty so gate arithmetic never trips on a quiet class."""
+        if not self.samples:
+            return 0.0
+        s = sorted(self.samples)
+        rank = max(0, min(len(s) - 1, int(round(q / 100.0 * len(s))) - 1))
+        if q <= 0:
+            rank = 0
+        return s[rank]
+
+    def merge_from(self, other: "LatencyReservoir") -> None:
+        """Fold another reservoir in (fleet aggregation): concatenate then
+        deterministically downsample back to cap via the seeded RNG."""
+        self.seen += other.seen
+        self.samples.extend(other.samples)
+        while len(self.samples) > self.cap:
+            self.samples.pop(self._rng.randrange(len(self.samples)))
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-request-class accounting: lifecycle counters plus streaming
+    TTFT and inter-token-latency reservoirs (host-only — nothing here
+    touches the device or adds a sync)."""
+
+    name: str
+    submitted: int = 0
+    finished: int = 0
+    shed: int = 0
+    rejected: int = 0
+    ttft: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir)
+    itl: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir)
+
+    def percentiles(self) -> dict[str, float]:
+        """p50/p95/p99 of both reservoirs (0.0 for a quiet class)."""
+        return {
+            "ttft_p50": self.ttft.percentile(50),
+            "ttft_p95": self.ttft.percentile(95),
+            "ttft_p99": self.ttft.percentile(99),
+            "itl_p50": self.itl.percentile(50),
+            "itl_p95": self.itl.percentile(95),
+            "itl_p99": self.itl.percentile(99),
+        }
+
+    def summary(self) -> dict:
+        """Lifecycle counters + percentiles as one JSON-ready dict."""
+        out = {"submitted": self.submitted, "finished": self.finished,
+               "shed": self.shed, "rejected": self.rejected}
+        out.update(self.percentiles())
+        return out
 
 
 @dataclasses.dataclass
@@ -86,6 +167,17 @@ class EngineStats:
     pool_pressure: float = 0.0
     aimd_ratio: float = 1.0
     queue_depth: int = 0
+    # overload / multi-tenant accounting (serving/overload.py): per-class
+    # lifecycle + tail-latency reservoirs, bounded-queue rejections, and the
+    # graceful-degradation ladder (level is a gauge; engagements/releases/
+    # sheds are counters so a rung that flaps still leaves a trace)
+    class_stats: dict = dataclasses.field(default_factory=dict)
+    requests_rejected: int = 0  # bounded admission queue was full
+    degradation_level: int = 0  # live ladder rung (0 = healthy)
+    degradation_level_peak: int = 0  # highest rung reached (high-water mark)
+    ladder_engagements: int = 0
+    ladder_releases: int = 0
+    ladder_sheds: int = 0  # queued work dropped by rung 4
 
     # -- the decode loop ----------------------------------------------------
 
@@ -110,12 +202,34 @@ class EngineStats:
         """A row failed OA validation (page reclaimed under its snapshot)."""
         self.reader_restarts += 1
 
-    def record_ttft(self, steps: int, seconds: float) -> None:
-        """A request produced its first token; fold into the running means."""
+    def _class(self, cls: str) -> ClassStats:
+        cs = self.class_stats.get(cls)
+        if cs is None:
+            cs = self.class_stats[cls] = ClassStats(cls)
+        return cs
+
+    def record_ttft(self, steps: int, seconds: float,
+                    cls: str | None = None) -> None:
+        """A request produced its first token; fold into the running means
+        (and, when the request carries a class, its class reservoir)."""
         self.ttft_requests += 1
         self.mean_ttft_steps += (steps - self.mean_ttft_steps) / self.ttft_requests
         self.mean_ttft_seconds += (
             (seconds - self.mean_ttft_seconds) / self.ttft_requests)
+        if cls is not None:
+            self._class(cls).ttft.add(seconds)
+
+    def record_itl(self, cls: str, seconds: float) -> None:
+        """One inter-token gap observed for a running request of ``cls``."""
+        self._class(cls).itl.add(seconds)
+
+    def record_class_submit(self, cls: str) -> None:
+        """A request of ``cls`` was accepted into the admission queue."""
+        self._class(cls).submitted += 1
+
+    def record_class_finish(self, cls: str) -> None:
+        """A request of ``cls`` finished (reached its target length)."""
+        self._class(cls).finished += 1
 
     def record_wall(self, seconds: float) -> None:
         """A drain loop finished; derive throughput from committed tokens."""
@@ -195,9 +309,32 @@ class EngineStats:
         """A denied admission grant was retried within the bounded budget."""
         self.grant_retries += 1
 
-    def record_shed(self) -> None:
-        """A request was rejected at admission: its deadline cannot be met."""
+    def record_shed(self, cls: str | None = None,
+                    by_ladder: bool = False) -> None:
+        """A QUEUED request was dropped: hopeless deadline at admission, or
+        rung 4 of the degradation ladder (``by_ladder``)."""
         self.requests_shed += 1
+        if by_ladder:
+            self.ladder_sheds += 1
+        if cls is not None:
+            self._class(cls).shed += 1
+
+    def record_rejection(self, cls: str | None = None) -> None:
+        """``submit`` refused a request outright: its class queue is at its
+        bound (explicit backpressure, never silent unbounded growth)."""
+        self.requests_rejected += 1
+        if cls is not None:
+            self._class(cls).rejected += 1
+
+    def record_ladder(self, level: int) -> None:
+        """The degradation ladder moved to ``level`` (gauge + direction
+        counters; call only on transitions)."""
+        if level > self.degradation_level:
+            self.ladder_engagements += 1
+        elif level < self.degradation_level:
+            self.ladder_releases += 1
+        self.degradation_level = level
+        self.degradation_level_peak = max(self.degradation_level_peak, level)
 
     def record_migration(self) -> None:
         """A request from a dead replica was requeued onto this one."""
@@ -281,6 +418,22 @@ def aggregate_stats(parts: list[EngineStats],
         total.pool_pressure = max(total.pool_pressure, s.pool_pressure)
         total.aimd_ratio = min(total.aimd_ratio, s.aimd_ratio)
         total.queue_depth += s.queue_depth
+        total.requests_rejected += s.requests_rejected
+        total.ladder_engagements += s.ladder_engagements
+        total.ladder_releases += s.ladder_releases
+        total.ladder_sheds += s.ladder_sheds
+        total.degradation_level = max(total.degradation_level,
+                                      s.degradation_level)
+        total.degradation_level_peak = max(total.degradation_level_peak,
+                                           s.degradation_level_peak)
+        for name, cs in s.class_stats.items():
+            tc = total._class(name)
+            tc.submitted += cs.submitted
+            tc.finished += cs.finished
+            tc.shed += cs.shed
+            tc.rejected += cs.rejected
+            tc.ttft.merge_from(cs.ttft)
+            tc.itl.merge_from(cs.itl)
         if s.ttft_requests:
             n = total.ttft_requests + s.ttft_requests
             total.mean_ttft_steps += (

@@ -58,3 +58,58 @@ def test_serve_replicas_flag_runs_data_parallel():
                   "--replicas", "2"])
     assert stats.tokens_committed > 0
     assert stats.superblocks_resident > 0  # anchors aggregate across pools
+
+
+def test_serve_cli_validation_fails_fast_and_clear():
+    """Typos in --classes / --trace raise a clear ValueError BEFORE the
+    model is built — each of these must fail in milliseconds."""
+    from repro.launch.serve import main
+    with pytest.raises(ValueError, match="unknown request class 'vip'"):
+        main(["--classes", "vip:1.0"])
+    with pytest.raises(ValueError, match="must be positive"):
+        main(["--classes", "interactive:0"])
+    with pytest.raises(ValueError, match="expected name:weight"):
+        main(["--classes", "interactive"])
+    with pytest.raises(ValueError, match="expected a number"):
+        main(["--classes", "interactive:lots"])
+    with pytest.raises(ValueError, match="duplicate class"):
+        main(["--classes", "interactive:1,interactive:2"])
+    with pytest.raises(ValueError, match="spec is empty"):
+        main(["--classes", " , "])
+    with pytest.raises(ValueError, match="drop one"):
+        main(["--classes", "interactive:1", "--trace", "x.jsonl"])
+    with pytest.raises(ValueError, match="--replicas"):
+        main(["--trace", "x.jsonl", "--replicas", "2"])
+    with pytest.raises(FileNotFoundError):
+        main(["--trace", "does-not-exist.jsonl"])
+
+
+def test_serve_stream_and_class_mix(capsys):
+    """--stream drains through the generator (incremental token lines) and
+    --classes reports per-class tail latency."""
+    from repro.launch.serve import main
+    stats = main(["--requests", "3", "--num-pages", "24", "--page-size", "4",
+                  "--max-batch", "2", "--prompt-len", "6", "--max-new", "3",
+                  "--stream", "--classes", "interactive:0.7,batch:0.3"])
+    out = capsys.readouterr().out
+    assert stats.tokens_committed > 0
+    assert "+1 tokens" in out  # incremental yields reached the console
+    assert "class interactive" in out
+    assert sum(cs.finished for cs in stats.class_stats.values()) == 3
+
+
+def test_serve_trace_replay_end_to_end(tmp_path):
+    """--trace replays a recorded two-class schedule open-loop and every
+    arrival is accounted for (finished / shed / rejected — never lost)."""
+    from repro.launch.serve import main
+    from repro.serving import dump_trace, synthesize_trace
+    events = synthesize_trace(3, duration_s=1.0, rate_rps=8.0,
+                              class_mix={"interactive": 0.6, "batch": 0.4},
+                              prompt_mean=5, max_new_mean=3,
+                              prompt_cap=8, max_new_cap=4)
+    path = tmp_path / "trace.jsonl"
+    dump_trace(events, str(path))
+    stats = main(["--num-pages", "32", "--page-size", "4",
+                  "--max-batch", "2", "--trace", str(path)])
+    assert stats.class_stats  # per-class reporting populated from the trace
+    assert sum(cs.finished for cs in stats.class_stats.values()) > 0

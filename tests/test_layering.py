@@ -50,12 +50,15 @@ def _imports(tree: ast.Module) -> set[str]:
 
 def test_scheduler_imports_no_jax():
     """The policy layer is pure host logic: no jax, no pool module — the
-    acceptance criterion that keeps scheduling portable across backends."""
-    mods = _imports(_tree("scheduler.py"))
-    for m in mods:
-        assert not (m == "jax" or m.startswith("jax.")), \
-            f"scheduler.py imports {m}"
-        assert "pagepool" not in m, f"scheduler.py imports {m}"
+    acceptance criterion that keeps scheduling portable across backends.
+    ``overload.py`` (class queues, degradation ladder) and ``traffic.py``
+    (open-loop arrival generation) are policy-layer too."""
+    for fname in ("scheduler.py", "overload.py", "traffic.py"):
+        mods = _imports(_tree(fname))
+        for m in mods:
+            assert not (m == "jax" or m.startswith("jax.")), \
+                f"{fname} imports {m}"
+            assert "pagepool" not in m, f"{fname} imports {m}"
 
 
 def test_scheduler_and_runner_never_touch_pool_internals():
@@ -78,7 +81,7 @@ def test_stats_fields_only_move_through_record_methods():
     (the double-count guard; exactness is proven by the host-mirror tests)."""
     offenders = []
     for fname in ("scheduler.py", "kv_manager.py", "runner.py", "engine.py",
-                  "parallel.py"):
+                  "parallel.py", "overload.py"):
         tree = _tree(fname)
         for node in ast.walk(tree):
             targets = []

@@ -110,6 +110,45 @@ def test_pool_too_small_for_one_request_raises():
         eng.run()
 
 
+def test_streaming_drain_yields_tokens_as_steps_complete():
+    """``stream()`` is run() as a generator: tokens arrive incrementally
+    (many yields, each a suffix of the final answer), the final outputs
+    match the batch run exactly, and no token is ever emitted twice even
+    across preemption restarts (the per-request high-water mark)."""
+    eng = PagedServingEngine(CFG, PARAMS, num_pages=4, page_size=4,
+                             max_batch=3, max_pages_per_seq=8)
+    reqs = [eng.submit(p, 6) for p in PROMPTS]
+    streamed = {r.rid: [] for r in reqs}
+    yields = 0
+    for req, new in eng.stream():
+        assert new, "a yield always carries at least one new token"
+        streamed[req.rid].extend(new)
+        yields += 1
+    assert yields > len(reqs)  # incremental, not one burst at drain end
+    assert eng.stats.preemptions > 0  # tiny pool: restarts happened
+    for r, b in zip(reqs, BASELINE):
+        assert r.state == "finished"
+        assert streamed[r.rid] == b == r.generated  # no dupes, no gaps
+
+
+def test_blocking_submit_waits_out_a_full_queue():
+    """With a bounded admission queue, ``submit(block=True)`` drives the
+    engine until space frees instead of rejecting — the queue never
+    exceeds its bound, and every request still finishes correctly."""
+    eng = PagedServingEngine(CFG, PARAMS, num_pages=64, page_size=4,
+                             max_batch=1, max_pages_per_seq=8,
+                             max_queue_depth=2)
+    first = eng.submit(PROMPTS[0], 6)
+    queued = eng.submit(PROMPTS[1], 6)
+    rejected = eng.submit(PROMPTS[2], 6)
+    assert rejected.state == "rejected" and eng.stats.requests_rejected == 1
+    blocked = eng.submit(PROMPTS[2], 6, block=True)  # drives steps inline
+    assert blocked.state != "rejected"
+    eng.run()
+    for r, b in zip((first, queued, blocked), BASELINE):
+        assert r.state == "finished" and r.generated == b
+
+
 def test_randomized_workloads_always_finish_correctly():
     """Property-style sweep: random prompt/generation lengths and pool sizes
     — every request finishes, outputs match a fresh ample-memory engine, no

@@ -188,6 +188,44 @@ def test_steady_state_single_transfer_per_reclaim_policy(monkeypatch, params,
         f"steady-state steps (sync-free hot path allows at most 1 per step)")
 
 
+def test_steady_state_single_transfer_with_ladder_engaged(monkeypatch,
+                                                          params):
+    """Overload response must not cost the hot path anything: with the
+    degradation ladder ENGAGED (tiny queue soft limit keeps the pressure
+    signal pinned high), every rung is pure host policy — chunk ceiling,
+    draft cap, cache eviction, queue shedding all turn knobs the scheduler
+    already owns — so steady-state decode is still one ``device_get`` per
+    step."""
+    from repro.serving import LadderConfig
+    eng = PagedServingEngine(CFG, params, num_pages=32, page_size=4,
+                             max_batch=2, max_pages_per_seq=8,
+                             prefix_cache=True,
+                             ladder=LadderConfig(high_water=0.5,
+                                                 low_water=0.1,
+                                                 engage_after=1,
+                                                 release_after=50,
+                                                 queue_soft_limit=1))
+    eng.submit(list(range(1, 5)), 14)
+    eng.submit(list(range(2, 6)), 14)
+    # backlog beyond max_batch keeps queue pressure above high_water
+    backlog = [eng.submit(list(range(3, 7)), 4, cls="background")
+               for _ in range(4)]
+    eng._admit()
+    for _ in range(4):  # compile + settle; ladder climbs during these
+        eng.step()
+    assert eng.scheduler.ladder.level >= 1, "ladder must be engaged"
+    counter = _TransferCounter()
+    _instrument(monkeypatch, counter)
+    nsteps = 6
+    for _ in range(nsteps):
+        eng.step()
+    assert counter.count <= nsteps, (
+        f"{counter.count} host transfers across {nsteps} steps with the "
+        f"degradation ladder engaged (allowed at most 1 per step)")
+    assert eng.stats.degradation_level >= 1
+    del backlog
+
+
 def test_steady_state_results_still_correct(params):
     """The instrumented path above must not be a different code path: the
     same workload, run normally, matches a per-request dense result."""
