@@ -121,6 +121,31 @@ def _checks(all_rows, crashed=()) -> bool:
               "mode", bool(mp[0]["sync_free_ok"]), "True",
               bool(mp[0]["sync_free_ok"]))
 
+    # tensor-parallel gates (BENCH_tensor_parallel.json): sharding must be
+    # a pure layout change.  Per-device weight+KV bytes at TP=2 must reach
+    # the memory point of TP (<= 0.6x, exact from shard shapes); greedy
+    # tokens must be IDENTICAL to TP=1; the hot path stays sync-free (the
+    # fused step's outputs are replicated, one device_get); throughput is
+    # judged against the model-only TP ceiling measured in the same round
+    # (host-simulated shards share cores — no absolute speedup expected).
+    tpb = [r for r in all_rows
+           if r["bench"] == "tensor_parallel" and r["method"] == "speedup"]
+    if tpb:
+        r = tpb[0]
+        _gate(gates, f"tensor_parallel: per-device bytes at TP=2 <= "
+              f"{r['memory_gate']}x TP=1 (got {r['memory_ratio']}x)",
+              r["memory_ratio"], f"<= {r['memory_gate']}",
+              bool(r["memory_gate_pass"]))
+        _gate(gates, f"tensor_parallel: TP=2 tokens/sec >= min(0.8, 0.8x "
+              f"host TP ceiling {r['ceiling_ratio']}x) of TP=1 "
+              f"(got {r['tp_ratio']}x, threshold {r['gate_threshold']}x)",
+              r["tp_ratio"], f">= {r['gate_threshold']}",
+              bool(r["gate_pass"]) and r["tp_ratio"] >= r["gate_threshold"])
+        _gate(gates, "tensor_parallel: greedy TP=2 tokens identical to TP=1",
+              bool(r["token_exact_ok"]), "True", bool(r["token_exact_ok"]))
+        _gate(gates, "tensor_parallel: sync-free invariant at TP=2",
+              bool(r["sync_free_ok"]), "True", bool(r["sync_free_ok"]))
+
     # chaos / self-healing gates (BENCH_chaos.json): the reference fault
     # schedule (10% grant denials + one replica kill mid-run) must keep
     # goodput within budget with zero lost or corrupted requests, and the
@@ -270,7 +295,7 @@ def main() -> None:
     from . import (chaos_goodput, decode_throughput, hash_table, linked_list,
                    memory_release, memory_release_device, multi_pool,
                    paged_attention_bench, prefix_cache, prefill_throughput,
-                   reclaim_matrix, speculative, traffic)
+                   reclaim_matrix, speculative, tensor_parallel, traffic)
 
     suite = [
         (linked_list, "fig4_linked_list"),
@@ -284,6 +309,7 @@ def main() -> None:
         (prefill_throughput, "chunked_prefill"),
         (speculative, "speculative_decoding"),
         (multi_pool, "data_parallel_multi_pool"),
+        (tensor_parallel, "tensor_parallel_serving"),
         (chaos_goodput, "chaos_goodput_self_healing"),
         (traffic, "traffic_tail_latency"),
     ]
@@ -296,6 +322,7 @@ def main() -> None:
             (prefill_throughput, "chunked_prefill"),
             (speculative, "speculative_decoding"),
             (multi_pool, "data_parallel_multi_pool"),
+            (tensor_parallel, "tensor_parallel_serving"),
             (chaos_goodput, "chaos_goodput_self_healing"),
             (traffic, "traffic_tail_latency"),
         ]

@@ -584,8 +584,18 @@ class DevicePagePool:
 
     def __init__(self, num_pages: int,
                  pages_per_superblock: int = DEFAULT_PAGES_PER_SUPERBLOCK,
-                 release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE):
+                 release_strategy: ReleaseStrategy = ReleaseStrategy.MADVISE,
+                 mesh=None):
         self.state = pool_init(num_pages, pages_per_superblock)
+        if mesh is not None:
+            # tensor-parallel serving: the whole pool pytree — superblock
+            # anchors, free lists, versions, refcounts, the OA clock — is the
+            # paper's SHARED metadata and replicates on every shard; the
+            # per-shard half of the split is the KV arena payload, which is
+            # not this class's concern (one logical pool, per-shard payloads)
+            self.state = jax.device_put(
+                self.state, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
         self.release_strategy = release_strategy
         self.superblocks_total = self.state.num_superblocks
         self.superblocks_mapped = self.superblocks_total

@@ -12,12 +12,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .paged_attention import paged_attention_pallas
+from .paged_attention import paged_attention_pallas, paged_attention_sharded
 from .ref import paged_attention_chunked_ref, paged_attention_ref
 
 
 def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
-                    pages_per_compute_block: int = 1, chunk_lens=None):
+                    pages_per_compute_block: int = 1, chunk_lens=None,
+                    mesh=None):
     """Decode or chunked-prefill attention over the paged pool.
 
     q [B, Hq, D] (decode: one query per row) or [B, C, Hq, D] (chunk: C
@@ -31,6 +32,12 @@ def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
     ``pages_per_compute_block`` tiles the Pallas grid: each grid step fetches
     that many KV pages and runs one set of MXU dots over the combined
     (ppcb*page_size, Hkv*D) tile (ignored by the jnp reference).
+
+    ``mesh`` (tensor-parallel serving): the jnp reference needs nothing —
+    GSPMD partitions it from the head-sharded arena layout — but a
+    ``pallas_call`` has no partitioning rule, so the pallas/interpret impls
+    route through ``paged_attention_sharded`` (``shard_map`` per-shard head
+    slabs) whenever the KV-head count divides the mesh's 'model' axis.
     """
     if q.ndim == 3:
         # decode form: one query per row, classic ``pos < lengths`` mask —
@@ -47,6 +54,14 @@ def paged_attention(q, kv, block_tables, lengths, *, impl: str = "ref",
                                            lengths, chunk_lens)
     page_size = kv["k"].shape[1]
     n_kv_heads = kv["k"].shape[2]
+    if (mesh is not None and mesh.shape.get("model", 1) > 1
+            and n_kv_heads % mesh.shape["model"] == 0):
+        return paged_attention_sharded(
+            q, kv["k"], kv["v"], block_tables, lengths, mesh=mesh,
+            page_size=page_size, n_kv_heads=n_kv_heads,
+            pages_per_compute_block=pages_per_compute_block,
+            interpret=(impl == "interpret"), chunk_lens=chunk_lens,
+        )
     return paged_attention_pallas(
         q, kv["k"], kv["v"], block_tables, lengths,
         page_size=page_size, n_kv_heads=n_kv_heads,

@@ -213,3 +213,51 @@ def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
     )(block_tables, lengths, chunk_lens, q,
       *([k_pages] * ppcb), *([v_pages] * ppcb))
     return out[:, 0] if squeeze else out
+
+
+def paged_attention_sharded(q, k_pages, v_pages, block_tables, lengths, *,
+                            mesh, page_size: int, n_kv_heads: int,
+                            pages_per_compute_block: int = 1,
+                            interpret: bool = True, chunk_lens=None):
+    """Tensor-parallel Pallas dispatch: ``shard_map`` over the mesh's 'model'
+    axis, one kernel launch per shard on its LOCAL head slab.
+
+    GSPMD cannot partition a ``pallas_call`` (no partitioning rule), so the
+    TP serving path wraps the kernel manually: q shards its ``Hq`` axis and
+    the KV arena its ``Hkv`` axis (both kv-head-major, so GQA groups never
+    straddle shards — q reshapes to ``[C, Hkv, G, D]`` inside the kernel),
+    while block tables / lengths / chunk_lens ride in replicated.  Attention
+    is embarrassingly parallel over KV-head groups: no collective here — the
+    cross-shard ``psum`` happens at the row-parallel ``wo`` matmul the
+    caller runs on the sharded output.  ``n_kv_heads`` is the GLOBAL count;
+    it must divide the 'model' axis size (callers fall back to the unsharded
+    kernel otherwise).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape["model"]
+    if n_kv_heads % tp != 0:
+        raise ValueError(f"n_kv_heads={n_kv_heads} not divisible by tp={tp}")
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C = q.shape[:2]
+    if chunk_lens is None:
+        chunk_lens = jnp.full((B,), C, jnp.int32)
+    heads = P(None, None, "model", None)  # q [B,C,Hq,D] / kv [P,page,Hkv,D]
+    rep = P()
+
+    def local(bt, ln, cl, qs, ks, vs):
+        return paged_attention_pallas(
+            qs, ks, vs, bt, ln, page_size=page_size,
+            n_kv_heads=n_kv_heads // tp,
+            pages_per_compute_block=pages_per_compute_block,
+            interpret=interpret, chunk_lens=cl)
+
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, rep, rep, heads, heads, heads),
+        out_specs=heads, check_rep=False,
+    )(block_tables, lengths, chunk_lens, q, k_pages, v_pages)
+    return out[:, 0] if squeeze else out

@@ -6,7 +6,34 @@ never touches jax device state — smoke tests must keep seeing 1 CPU device.
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+
+
+def _make_mesh(shape, axes, devices):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types=`` (explicit/auto axis typing) landed in jax 0.5.x; on the
+    pinned 0.4.37 the kwarg does not exist, and every axis is implicitly
+    Auto — which is exactly what we pass on newer versions, so behaviour is
+    identical either way.
+    """
+    kwargs = {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def mesh_context(mesh):
+    """Version-portable "make this the ambient mesh" context manager.
+
+    jax 0.5.x+ spells it ``jax.set_mesh(mesh)``; on the pinned 0.4.37 the
+    ``Mesh`` object is itself the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,17 +51,25 @@ def make_production_mesh(*, multi_pod: bool = False):
             "The dry-run entrypoint must set XLA_FLAGS="
             "--xla_force_host_platform_device_count=512 before importing jax."
         )
-    return jax.make_mesh(
-        shape, axes,
-        devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, devices)
 
 
 def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
     """Tiny mesh for in-subprocess sharding tests (8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes,
-        devices=jax.devices()[: shape[0] * shape[1]],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, jax.devices()[: shape[0] * shape[1]])
+
+
+def make_serving_mesh(tp: int, devices=None):
+    """``('data', 'model')`` mesh for one tensor-parallel serving engine.
+
+    ``devices`` (default ``jax.devices()[:tp]``) become the 'model' axis of a
+    (1, tp) mesh; the 'data' axis is size 1 because replica-level parallelism
+    is composed OUTSIDE the mesh by ``DataParallelEngine`` (each replica gets
+    its own sub-mesh — 2D replica x tensor fleets without a global mesh).
+    """
+    devices = list(devices) if devices is not None else jax.devices()[:tp]
+    if len(devices) < tp:
+        raise RuntimeError(
+            f"tensor_parallel={tp} needs {tp} devices; have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:tp]).reshape(1, tp), ("data", "model"))

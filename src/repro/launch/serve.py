@@ -127,6 +127,12 @@ def main(argv: list[str] | None = None):
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel pool+runner replicas (1 = single "
                          "engine; N>1 routes by prefix affinity + pressure)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor parallelism per engine: shard weights and "
+                         "the KV page arena over a ('data','model') mesh of "
+                         "N devices (composes with --replicas into a 2D "
+                         "replica x tensor fleet needing replicas*tp "
+                         "devices)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: up to K n-gram-drafted "
                          "tokens verified per fused dispatch (0 = off; "
@@ -164,6 +170,17 @@ def main(argv: list[str] | None = None):
     if args.stream and args.replicas > 1:
         raise ValueError("--stream drains a single engine; it cannot be "
                          "combined with --replicas > 1")
+    if args.tp < 1:
+        raise ValueError(f"--tp must be >= 1, got {args.tp}")
+    if args.tp > 1:
+        have = len(jax.devices())
+        need = args.tp * max(args.replicas, 1)
+        if have < need:
+            raise ValueError(
+                f"--tp {args.tp} x --replicas {args.replicas} needs {need} "
+                f"devices; have {have} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need} for a "
+                f"host-simulated mesh)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -195,13 +212,16 @@ def main(argv: list[str] | None = None):
         num_pages=args.num_pages, page_size=args.page_size,
         max_batch=args.max_batch, max_pages_per_seq=pages_per_seq,
         prefix_cache=args.prefix_cache, speculative_k=args.spec_k,
+        tensor_parallel=args.tp,
     )
     if args.replicas > 1:
         eng = DataParallelEngine(cfg, params, replicas=args.replicas,
                                  **engine_kw)
     else:
         eng = PagedServingEngine(cfg, params, **engine_kw)
-    label = (f"[serve x{args.replicas}]" if args.replicas > 1 else "[serve]")
+    label = (f"[serve x{args.replicas}"
+             + (f" tp{args.tp}" if args.tp > 1 else "") + "]"
+             if args.replicas > 1 or args.tp > 1 else "[serve]")
 
     if events is not None:
         reqs = _replay_trace(eng, events, cfg.vocab)

@@ -71,20 +71,58 @@ class PagedServingEngine:
                  victim_policy="youngest",
                  ladder=None,
                  clock=None,
-                 device=None):
+                 device=None,
+                 tensor_parallel: int = 1,
+                 devices=None):
         self.cfg = cfg
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_batch = max_batch
+        # tensor parallelism: a per-engine ('data','model') mesh of
+        # ``tensor_parallel`` devices (the 'data' axis is size 1 — replica
+        # parallelism composes OUTSIDE the engine, see serving/parallel.py).
+        # Weights shard by param_specs(serving=True), the KV arena by the
+        # paged-cache rule (Hkv over 'model'); the pool, block tables and
+        # every other scalar of engine state replicate, so each shard makes
+        # the identical alloc/free/validate decision — one logical pool,
+        # per-shard payloads.
+        self.tensor_parallel = int(tensor_parallel)
+        if self.tensor_parallel > 1:
+            if device is not None:
+                raise ValueError(
+                    "tensor_parallel > 1 takes a `devices` list, not a "
+                    "single `device`")
+            devs = list(devices) if devices is not None else jax.devices()
+            if len(devs) < self.tensor_parallel:
+                raise RuntimeError(
+                    f"tensor_parallel={self.tensor_parallel} needs that many "
+                    f"devices; have {len(devs)}")
+            import numpy as _np
+            self.mesh = jax.sharding.Mesh(
+                _np.asarray(devs[: self.tensor_parallel]).reshape(
+                    1, self.tensor_parallel),
+                ("data", "model"))
+        else:
+            self.mesh = None
+            if device is None and devices:
+                device = devices[0]
         self.device = device
         ctx = (jax.default_device(device) if device is not None
                else contextlib.nullcontext())
         with ctx:
-            self.params = (jax.device_put(params, device)
-                           if device is not None else params)
+            if self.mesh is not None:
+                from repro.sharding import rules
+                self.params = jax.device_put(
+                    params, rules.to_named(
+                        rules.param_specs(cfg, params, self.mesh,
+                                          serving=True),
+                        self.mesh))
+            else:
+                self.params = (jax.device_put(params, device)
+                               if device is not None else params)
             self.stats = EngineStats()
             allocator = DevicePagePool(num_pages, pages_per_superblock,
-                                       release_strategy)
+                                       release_strategy, mesh=self.mesh)
             if chaos is not None:
                 # fault injection wraps the PROTOCOL, not the pool: the
                 # whole stack above sees denials/perturbations through the
@@ -102,14 +140,17 @@ class PagedServingEngine:
             allocator = policy.wrap(allocator)
             self.stats.record_superblocks(allocator.view())
             self.kv_manager = KVCacheManager(
-                allocator, kv=kv_storage_init(cfg, num_pages, page_size),
+                allocator,
+                kv=kv_storage_init(cfg, num_pages, page_size,
+                                   mesh=self.mesh),
                 max_batch=max_batch,
                 max_pages_per_seq=max_pages_per_seq or num_pages,
-                page_size=page_size, stats=self.stats)
+                page_size=page_size, stats=self.stats, mesh=self.mesh)
             self.runner = ModelRunner(
                 cfg, self.params, attn_impl=attn_impl, greedy=greedy,
                 temperature=temperature, seed=seed,
-                pages_per_compute_block=pages_per_compute_block)
+                pages_per_compute_block=pages_per_compute_block,
+                mesh=self.mesh)
             self.scheduler = Scheduler(
                 self.kv_manager, self.stats, num_pages=num_pages,
                 page_size=page_size, max_batch=max_batch,

@@ -97,22 +97,31 @@ class KVCacheManager:
     """Page lifecycle mechanics behind the scheduler (module docstring)."""
 
     def __init__(self, allocator: Allocator, *, kv, max_batch: int,
-                 max_pages_per_seq: int, page_size: int, stats: EngineStats):
+                 max_pages_per_seq: int, page_size: int, stats: EngineStats,
+                 mesh=None):
         self.allocator = allocator
         self.kv = kv
         self.stats = stats
         self.page_size = page_size
         self.max_batch = max_batch
         self.max_pages_per_seq = max_pages_per_seq
+        # tensor-parallel serving: per-slot arrays (block tables, snapshots,
+        # lengths, prompt buffers) are the SHARED metadata of the split —
+        # replicated on every shard of the mesh so the fused step's pool and
+        # validation decisions are identical everywhere; only the KV arena
+        # payload (built head-sharded by ``kv_storage_init``) is per-shard
+        self._replicate = (
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            if mesh is not None else None)
         B, M = max_batch, max_pages_per_seq
-        self._bt = jnp.full((B, M), -1, jnp.int32)
-        self._snap = jnp.zeros((B, M), jnp.uint32)
-        self._len = jnp.zeros((B,), jnp.int32)
-        self._last = jnp.zeros((B,), jnp.int32)
-        self._active = jnp.zeros((B,), bool)
+        self._bt = self._place(jnp.full((B, M), -1, jnp.int32))
+        self._snap = self._place(jnp.zeros((B, M), jnp.uint32))
+        self._len = self._place(jnp.zeros((B,), jnp.int32))
+        self._last = self._place(jnp.zeros((B,), jnp.int32))
+        self._active = self._place(jnp.zeros((B,), bool))
         self._prompt_cap = 16
-        self._pbuf = jnp.zeros((B, self._prompt_cap), jnp.int32)
-        self._plen = jnp.zeros((B,), jnp.int32)
+        self._pbuf = self._place(jnp.zeros((B, self._prompt_cap), jnp.int32))
+        self._plen = self._place(jnp.zeros((B,), jnp.int32))
         #: slot index -> the request object occupying it (None = free)
         self.slots: list = [None] * B
         #: page -> live slot references beyond the allocator's own refcount
@@ -121,6 +130,11 @@ class KVCacheManager:
         #: scheduler's page->entry dict (bound via :meth:`bind_index`), so
         #: the zero-transition predicates can never drift from the index
         self.index_pages = {}.keys()
+
+    def _place(self, arr):
+        """Replicate ``arr`` over the serving mesh (identity without one)."""
+        return (jax.device_put(arr, self._replicate)
+                if self._replicate is not None else arr)
 
     # -- step-state plumbing (the runner's side of the contract) -------------
 

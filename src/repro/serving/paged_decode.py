@@ -64,17 +64,51 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from repro.core import pagepool as pp
 from repro.kernels.ops import paged_attention, speculative_accept
 from repro.models.layers import apply_norm, attention_qkv, mlp_apply
 from repro.models.transformer import embed_tokens, unembed
+from repro.sharding import rules
 
 
-def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+def kv_storage_init(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16,
+                    mesh=None):
     """The persistent all-layer KV arena [L, P, page, Hkv, D] (palloc: pages
-    stay addressable forever; stale reads validate, never fault)."""
+    stay addressable forever; stale reads validate, never fault).
+
+    With ``mesh`` the arena is laid out by the paged-cache rule
+    (``sharding.rules.cache_specs(paged=True)``): the KV-HEAD axis shards
+    over 'model' so each shard holds ``Hkv/tp`` heads of every page — the
+    pool's page ids stay meaningful on every shard.
+    """
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    kv = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mesh is not None:
+        specs = rules.cache_specs(cfg, kv, mesh, paged=True)
+        kv = jax.device_put(kv, rules.to_named(specs, mesh))
+    return kv
+
+
+def _tp_pin(mesh, kv, rest):
+    """Pin the fused step's output layout under tensor parallelism: the KV
+    arena keeps its head-sharded layout, everything else (pool anchors,
+    block tables, snapshots, per-row results) stays replicated.  Explicit
+    constraints — rather than trusting GSPMD propagation — keep the donated
+    input/output layouts identical step over step (no silent re-layout, no
+    doubled arena memory)."""
+    rep = NamedSharding(mesh, PartitionSpec())
+    tp = mesh.shape["model"]
+    kv_spec = [None] * 5
+    if kv["k"].shape[3] % tp == 0:
+        kv_spec[3] = "model"
+    kv_sh = NamedSharding(mesh, PartitionSpec(*kv_spec))
+    kv = {n: jax.lax.with_sharding_constraint(a, kv_sh)
+          for n, a in kv.items()}
+    rest = jax.tree.map(
+        lambda a: jax.lax.with_sharding_constraint(a, rep), rest)
+    return kv, rest
 
 
 def max_chunk_pages(chunk_size: int, page_size: int) -> int:
@@ -86,7 +120,7 @@ def max_chunk_pages(chunk_size: int, page_size: int) -> int:
 
 def _chunk_core(params, kv, block_tables, lengths, tokens, n_new, *, cfg,
                 impl: str = "ref", pages_per_compute_block: int = 1,
-                write_ok=None):
+                write_ok=None, mesh=None):
     """Model math for a C-token chunk per row (C = 1 is plain decode).
 
     tokens [B, C] int32 — chunk inputs; position of tokens[b, j] is
@@ -130,7 +164,7 @@ def _chunk_core(params, kv, block_tables, lengths, tokens, n_new, *, cfg,
         att = paged_attention(q, {"k": kl, "v": vl}, block_tables,
                               total_len, impl=impl,
                               pages_per_compute_block=pages_per_compute_block,
-                              chunk_lens=n_new)
+                              chunk_lens=n_new, mesh=mesh)
         x = x + att.reshape(B, C, -1) @ blk["attn"]["wo"]
         h2 = apply_norm(cfg, x, blk["ln2"])
         if cfg.moe:
@@ -167,7 +201,7 @@ def paged_decode_step(params, kv, block_tables, lengths, tokens, *, cfg,
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "impl", "greedy", "pages_per_compute_block",
-                     "chunk_size", "speculative"),
+                     "chunk_size", "speculative", "mesh"),
     donate_argnums=(1, 2, 3, 4, 5, 6),
 )
 def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
@@ -176,7 +210,8 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
                       draft_lens=None, do_validate=None, *, cfg,
                       impl: str = "ref",
                       greedy: bool = True, pages_per_compute_block: int = 1,
-                      chunk_size: int = 1, speculative: bool = False):
+                      chunk_size: int = 1, speculative: bool = False,
+                      mesh=None):
     """The sync-free batched step: one dispatch, one host transfer — now
     covering up to ``chunk_size`` prompt tokens per prefilling row.
 
@@ -348,7 +383,8 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     # (4) model math (starved rows' appends are masked — see _chunk_core)
     x, kv = _chunk_core(
         params, kv, block_tables, lengths, tok_in, n_new, cfg=cfg, impl=impl,
-        pages_per_compute_block=pages_per_compute_block, write_ok=grant_ok)
+        pages_per_compute_block=pages_per_compute_block, write_ok=grant_ok,
+        mesh=mesh)
 
     # (5) on-device token selection.  Plain path: only the chunk's last
     # live position is unembedded — logits never leave the device.
@@ -403,5 +439,15 @@ def fused_decode_step(params, kv, pool, block_tables, snapshot, lengths,
     adv = jnp.where(valid, commit_n, 0).astype(jnp.int32)
     lengths = lengths + adv
     last_tok = jnp.where(valid & samples, nxt, last_tok)
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        # pin the TP layout on the way out: head-sharded arena, replicated
+        # everything-else — by construction every shard ran the identical
+        # pool/validation math, so the replicated outputs agree bit-for-bit
+        # and the engine's single device_get pulls ONE host-visible result
+        kv, rest = _tp_pin(
+            mesh, kv, (pool, block_tables, snapshot, lengths, last_tok,
+                       nxt, valid, grant_info, cow, adv, n_acc))
+        (pool, block_tables, snapshot, lengths, last_tok,
+         nxt, valid, grant_info, cow, adv, n_acc) = rest
     return (kv, pool, block_tables, snapshot, lengths, last_tok,
             nxt, valid, grant_info, cow, adv, n_acc)

@@ -88,6 +88,7 @@ class DataParallelEngine:
     watchdog (module docstring)."""
 
     def __init__(self, cfg, params, *, replicas: int = 2, devices=None,
+                 tensor_parallel: int = 1,
                  watchdog: WatchdogConfig | None = None, **engine_kwargs):
         if replicas < 1:
             raise ValueError("need at least one replica")
@@ -95,11 +96,21 @@ class DataParallelEngine:
             devices = jax.devices()
         self._ctor = (cfg, params)
         self._devices = devices
+        # 2D replica x tensor fleets: replica i owns the device slice
+        # [i*tp, (i+1)*tp) as its private ('data','model') sub-mesh — the
+        # tensor axis lives INSIDE each engine, the replica axis stays this
+        # router's concern, and no mesh spans two replicas (failure domains
+        # and page-id spaces remain per-replica, exactly as at tp=1)
+        self.tensor_parallel = int(tensor_parallel)
+        if self.tensor_parallel > 1 and \
+                len(devices) < replicas * self.tensor_parallel:
+            raise RuntimeError(
+                f"2D fleet needs replicas*tp = {replicas * self.tensor_parallel}"
+                f" devices; have {len(devices)}")
         self._engine_kwargs = dict(engine_kwargs)
         self.watchdog = watchdog
         self.replicas = [
-            PagedServingEngine(cfg, params,
-                               device=devices[i % len(devices)],
+            PagedServingEngine(cfg, params, **self._placement_for(i),
                                **self._engine_kwargs_for(i))
             for i in range(replicas)
         ]
@@ -109,6 +120,16 @@ class DataParallelEngine:
         self.step_hooks: list = [None] * replicas
         self._retired: list[EngineStats] = []  # stats of replaced engines
         self._wall = 0.0
+
+    def _placement_for(self, i: int) -> dict:
+        """Replica ``i``'s device placement kwargs: one device (tp=1, the
+        classic fleet) or its private tp-wide slice of the device list (the
+        2D replica x tensor fleet)."""
+        tp = self.tensor_parallel
+        if tp <= 1:
+            return {"device": self._devices[i % len(self._devices)]}
+        return {"tensor_parallel": tp,
+                "devices": self._devices[i * tp:(i + 1) * tp]}
 
     def _engine_kwargs_for(self, i: int) -> dict:
         """Per-replica engine kwargs: a shared chaos config gets its seed
@@ -349,7 +370,7 @@ class DataParallelEngine:
         cfg, params = self._ctor
         self._retired.append(self.replicas[i].stats)
         self.replicas[i] = PagedServingEngine(
-            cfg, params, device=self._devices[i % len(self._devices)],
+            cfg, params, **self._placement_for(i),
             **self._engine_kwargs_for(i))
         self.alive[i] = True
         self.replicas[i].stats.record_revival()

@@ -51,12 +51,17 @@ class ModelRunner:
 
     def __init__(self, cfg, params, *, attn_impl: str = "ref",
                  greedy: bool = True, temperature: float = 1.0,
-                 seed: int = 0, pages_per_compute_block: int = 1):
+                 seed: int = 0, pages_per_compute_block: int = 1,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.attn_impl = attn_impl
         self.greedy = greedy
         self.pages_per_compute_block = pages_per_compute_block
+        # tensor-parallel serving: a ('data','model') mesh threads through
+        # to the fused step as a STATIC arg (sharding constraints + the
+        # shard_map'ed pallas dispatch); None = the classic 1-device path
+        self.mesh = mesh
         self._temperature = jnp.asarray(temperature, jnp.float32)
         self._base_key = jax.random.PRNGKey(seed)
         # resident device scalar for the C=1 executable, where the budget is
@@ -69,6 +74,16 @@ class ModelRunner:
         # resident so skipping validation never costs a per-step upload
         self._val_true = jnp.asarray(True)
         self._val_false = jnp.asarray(False)
+        if mesh is not None:
+            # every array entering the fused jit must live on the SAME mesh
+            # (committed single-device scalars beside mesh-committed state
+            # is a placement error) — pin the resident scalars replicated
+            rep = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            (self._temperature, self._base_key, self._budget_one,
+             self._val_true, self._val_false) = jax.device_put(
+                (self._temperature, self._base_key, self._budget_one,
+                 self._val_true, self._val_false), rep)
         self._step_idx = 0
 
     def launch(self, kvm: KVCacheManager, *, chunk_size: int = 1,
@@ -118,7 +133,7 @@ class ModelRunner:
             self._val_true if do_validate else self._val_false,
             cfg=self.cfg, impl=self.attn_impl, greedy=self.greedy,
             pages_per_compute_block=self.pages_per_compute_block,
-            chunk_size=chunk_size, speculative=speculative)
+            chunk_size=chunk_size, speculative=speculative, mesh=self.mesh)
         kvm.install_state(DeviceStepState(
             kv, pool, bt, snap, lengths, last,
             st.active, st.prompt_buf, st.prompt_len))

@@ -156,12 +156,32 @@ def batch_specs(cfg, batch_tree, mesh):
     return tree_map_with_path(assign, batch_tree)
 
 
-def cache_specs(cfg, cache_tree, mesh):
+def cache_specs(cfg, cache_tree, mesh, *, paged: bool = False):
+    """Cache layout rules.
+
+    ``paged=False`` (dense decode cache): k/v are ``[L,B,S,Hkv,Dh]`` and
+    shard the SEQUENCE axis over 'model' (sequence-parallel KV).
+
+    ``paged=True`` (the serving engine's page arena): k/v are
+    ``[L,P,page,Hkv,Dh]`` — axis 1 is the physical page id and axis 2 the
+    in-page slot, neither of which may shard (a block-table gather must find
+    every slot of a page on-device).  The KV-HEAD axis shards over 'model'
+    instead: each shard holds ``Hkv/tp`` heads of EVERY page, so the pool's
+    alloc/free/validate decisions (which only see page ids) are identical on
+    all shards — one logical pool, per-shard payloads.  Non-divisible head
+    counts fall back to replication, never to a wrong layout.
+    """
     tp = mesh.shape["model"]
 
     def assign(path, leaf):
         names = [str(p.key) for p in path if isinstance(p, DictKey)]
         name = names[-1]
+        if paged:
+            spec = [None] * len(leaf.shape)
+            if name in ("k", "v") and len(leaf.shape) == 5 \
+                    and leaf.shape[3] % tp == 0:  # [L,P,page,Hkv,Dh]
+                spec[3] = "model"
+            return P(*spec)
         if name == "len":
             dp = dp_axes_for(leaf.shape[0], mesh)
             return P(dp if dp else None)

@@ -61,6 +61,33 @@ def test_scheduler_imports_no_jax():
             assert "pagepool" not in m, f"{fname} imports {m}"
 
 
+def test_policy_layer_is_mesh_free():
+    """Tensor parallelism never crosses the facade into policy: the
+    scheduler, overload ladder, and traffic layers contain NO mesh or
+    sharding identifiers — every alloc/free/validate decision they make is
+    replicated verbatim on all shards precisely because they cannot see the
+    mesh.  The mesh stops at the engine's device layers (engine/runner/
+    kv_manager/pagepool take it as a constructor-injected placement detail)."""
+    banned = ("mesh", "sharding", "shard_map", "partitionspec")
+    for fname in ("scheduler.py", "overload.py", "traffic.py"):
+        tree = _tree(fname)
+        for node in ast.walk(tree):
+            name = None
+            if isinstance(node, ast.Name):
+                name = node.id
+            elif isinstance(node, ast.Attribute):
+                name = node.attr
+            elif isinstance(node, ast.arg):
+                name = node.arg
+            if name is not None:
+                for b in banned:
+                    assert b not in name.lower(), \
+                        f"{fname}:{node.lineno} policy layer touches {name!r}"
+        for m in _imports(tree):
+            assert "sharding" not in m and "mesh" not in m, \
+                f"{fname} imports {m}"
+
+
 def test_scheduler_and_runner_never_touch_pool_internals():
     """No direct pool-attribute access from the policy or executor layers:
     the pool pytree's fields are the KV manager's (and the fused kernel

@@ -226,6 +226,85 @@ def test_steady_state_single_transfer_with_ladder_engaged(monkeypatch,
     del backlog
 
 
+_TP_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import jax
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving import PagedServingEngine
+
+CFG = reduced(get_config("olmo-1b"))
+params = build_model(CFG).init(jax.random.PRNGKey(0))
+eng = PagedServingEngine(CFG, params, num_pages=32, page_size=4,
+                         max_batch=2, max_pages_per_seq=8, tensor_parallel=2)
+eng.submit(list(range(1, 5)), 14)
+eng.submit(list(range(2, 6)), 14)
+eng._admit()
+for _ in range(3):  # compile + settle
+    eng.step()
+
+
+class Counter:
+    def __init__(self):
+        self.count = 0
+        self._inside = False
+
+    def wrap(self, fn):
+        def wrapped(*args, **kwargs):
+            if self._inside:
+                return fn(*args, **kwargs)
+            self.count += 1
+            self._inside = True
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                self._inside = False
+        return wrapped
+
+
+import jax._src.array as jarray
+counter = Counter()
+jax.device_get = counter.wrap(jax.device_get)
+for name in ("__array__", "__bool__", "__int__", "__float__", "__index__"):
+    orig = getattr(jarray.ArrayImpl, name, None)
+    if orig is not None:
+        setattr(jarray.ArrayImpl, name, counter.wrap(orig))
+nsteps = 6
+for _ in range(nsteps):
+    eng.step()
+print(json.dumps({"transfers": counter.count, "nsteps": nsteps,
+                  "devices": len(jax.devices())}))
+"""
+
+
+def test_steady_state_single_transfer_under_tensor_parallel():
+    """Tensor parallelism must not cost the hot path anything: the fused
+    step's outputs are REPLICATED on every shard, so the single
+    ``device_get`` of (tokens, valid, grant-info) stays one logical transfer
+    even with the weights and KV arena sharded over a 2-device 'model' axis.
+    Runs in a subprocess (forced host devices; the main process is pinned to
+    1 device by tests/test_sharding.py::test_tests_see_one_device)."""
+    import json
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", _TP_PROG],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 2
+    assert out["transfers"] <= out["nsteps"], (
+        f"{out['transfers']} host transfers across {out['nsteps']} "
+        f"steady-state TP=2 steps (sync-free hot path allows at most 1 "
+        f"per step)")
+
+
 def test_steady_state_results_still_correct(params):
     """The instrumented path above must not be a different code path: the
     same workload, run normally, matches a per-request dense result."""
